@@ -1,0 +1,37 @@
+"""Fig. 8c reproduction: tuning-iteration counts vs number of
+communications — Lagom's profile count grows linearly (≈2× AutoCCL's
+single-comm count for a 2-comm overlap, per the paper)."""
+from __future__ import annotations
+
+from repro.core import A40_NVLINK, Simulator
+from repro.core import autoccl, tuner
+from repro.core.workload import CommOp, OverlapGroup, matmul_comp
+
+
+def _group(n_comms: int):
+    # comp scales with n so the X:Y regime (and thus per-comm tuning depth)
+    # is constant — isolating the complexity-in-N measurement
+    comps = [matmul_comp(f"mm{i}", 4096, 2560, 10240) for i in range(4 * n_comms)]
+    comms = [CommOp(f"c{i}", "allreduce", 64e6, 8) for i in range(n_comms)]
+    return OverlapGroup(f"g{n_comms}", comps=comps, comms=comms)
+
+
+def run():
+    rows = []
+    for n in (1, 2, 4, 8):
+        g = _group(n)
+        lag = tuner.tune_group(Simulator(A40_NVLINK, noise=0.01, seed=0), g)
+        sim2 = Simulator(A40_NVLINK, noise=0.01, seed=1)
+        _, ac_iters = autoccl.tune_group(sim2, g)
+        rows.append(dict(table="fig8c", n_comms=n,
+                         lagom_iters=lag.iterations, autoccl_iters=ac_iters,
+                         lagom_per_comm=lag.iterations / n))
+    return rows
+
+
+def headline(rows):
+    by = {r["n_comms"]: r for r in rows}
+    ratio = by[2]["lagom_iters"] / by[1]["lagom_iters"]
+    ratio8 = by[8]["lagom_iters"] / by[1]["lagom_iters"]
+    return [("fig8c.lagom_iters_2comm_over_1comm", ratio, "paper: ~2 (linear)"),
+            ("fig8c.lagom_iters_8comm_over_1comm", ratio8, "linear -> ~8")]

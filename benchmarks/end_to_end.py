@@ -1,0 +1,87 @@
+"""Fig. 7 reproduction: end-to-end iteration time across the paper's
+Table-2 workloads (FSDP on 8/16 GPUs; TP with 2 AllReduce/layer ×
+microbatches; EP with dual-batch AlltoAll) on both clusters, under NCCL
+defaults / AutoCCL / Lagom."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import (A40_NVLINK, A40_PCIE, ParallelPlan, Simulator,
+                        extract_workload)
+from repro.core import autoccl, tuner
+from repro.core.baselines import nccl_defaults
+
+# (model, plan, seq, global_batch) — Table 2
+FSDP_WORKLOADS = [
+    ("phi2-2b", ParallelPlan(kind="fsdp", dp=8), 2048, 16),
+    ("phi2-2b", ParallelPlan(kind="fsdp", dp=16), 2048, 32),
+    ("llama3-8b", ParallelPlan(kind="fsdp", dp=8), 2048, 16),
+    ("llama3-8b", ParallelPlan(kind="fsdp", dp=16), 2048, 32),
+    ("mpt-7b", ParallelPlan(kind="fsdp", dp=8), 2048, 16),
+    ("mpt-7b", ParallelPlan(kind="fsdp", dp=16), 2048, 32),
+]
+TP_EP_WORKLOADS = [
+    ("phi2-2b", ParallelPlan(kind="tp", tp=8), 2048, 512 // 8),
+    ("llama3-8b", ParallelPlan(kind="tp", tp=8), 2048, 256 // 8),
+    ("mpt-7b", ParallelPlan(kind="tp", tp=8), 2048, 256 // 8),
+    ("deepseek-moe-16b", ParallelPlan(kind="ep", ep=8), 2048, 16),
+    ("olmoe-1b-7b", ParallelPlan(kind="ep", ep=8), 2048, 16),
+]
+
+
+def _bench(model, plan, seq, gbs, hw, layers=None):
+    cfg = get_config(model)
+    wl = extract_workload(cfg, plan, seq=seq, global_batch=gbs, layers=layers)
+    sim = Simulator(hw, noise=0.01, seed=0)
+    base = sim.profile(wl, nccl_defaults(wl, hw))
+    lag_cfgs, lag_iters, _ = tuner.tune_workload(sim, wl)
+    lag = sim.profile(wl, lag_cfgs)
+    ac_cfgs, ac_iters = autoccl.tune_workload(Simulator(hw, noise=0.01, seed=1), wl)
+    ac = sim.profile(wl, ac_cfgs)
+    return dict(model=model, parallelism=plan.kind,
+                world=plan.world, cluster=hw.name,
+                nccl_ms=base.Z * 1e3, autoccl_ms=ac.Z * 1e3, lagom_ms=lag.Z * 1e3,
+                lagom_vs_nccl=base.Z / lag.Z, lagom_vs_autoccl=ac.Z / lag.Z,
+                autoccl_vs_nccl=base.Z / ac.Z,
+                lagom_profiles=lag_iters, autoccl_profiles=ac_iters)
+
+
+def run(fast: bool = False):
+    rows = []
+    layers = 8 if fast else None
+    for hw in (A40_NVLINK, A40_PCIE):
+        for model, plan, seq, gbs in FSDP_WORKLOADS:
+            r = _bench(model, plan, seq, gbs, hw, layers)
+            r["table"] = "fig7a"
+            rows.append(r)
+        for model, plan, seq, gbs in TP_EP_WORKLOADS:
+            r = _bench(model, plan, seq, gbs, hw, layers)
+            r["table"] = "fig7b"
+            rows.append(r)
+    return rows
+
+
+def headline(rows):
+    f = [r for r in rows if r["table"] == "fig7a"]
+    t = [r for r in rows if r["table"] == "fig7b" and r["parallelism"] == "tp"]
+    e = [r for r in rows if r["table"] == "fig7b" and r["parallelism"] == "ep"]
+    out = []
+    if f:
+        out.append(("fig7a.fsdp_lagom_vs_nccl_range",
+                    f"{min(r['lagom_vs_nccl'] for r in f):.3f}-"
+                    f"{max(r['lagom_vs_nccl'] for r in f):.3f}",
+                    "paper: 1.10-1.33x"))
+    if t:
+        out.append(("fig7b.tp_lagom_vs_nccl_range",
+                    f"{min(r['lagom_vs_nccl'] for r in t):.3f}-"
+                    f"{max(r['lagom_vs_nccl'] for r in t):.3f}",
+                    "paper: 1.08-1.16x"))
+    if e:
+        out.append(("fig7b.ep_lagom_vs_nccl_range",
+                    f"{min(r['lagom_vs_nccl'] for r in e):.3f}-"
+                    f"{max(r['lagom_vs_nccl'] for r in e):.3f}",
+                    "paper: 1.07-1.08x"))
+    out.append(("fig7.lagom_vs_autoccl_range",
+                f"{min(r['lagom_vs_autoccl'] for r in rows):.3f}-"
+                f"{max(r['lagom_vs_autoccl'] for r in rows):.3f}",
+                "paper: 1.03-1.27x"))
+    return out

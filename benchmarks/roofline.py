@@ -1,0 +1,187 @@
+"""Roofline terms per (architecture × input shape × mesh) — deliverable (g).
+
+Sources:
+  * the dry-run JSONs (experiments/dryrun/*.json): compile proof, per-device
+    memory analysis, RAW cost_analysis FLOPs/bytes and HLO-parsed collective
+    bytes.  CAVEAT (documented in EXPERIMENTS.md): XLA's HLO cost analysis
+    counts while/scan bodies ONCE, and this framework deliberately wraps
+    layers, grad-accum, CE chunks and attention blocks in scans to keep
+    512-way GSPMD compiles tractable — so the raw numbers undercount by the
+    product of trip counts.
+  * ANALYTIC per-op counts (this file): the corrected roofline inputs.
+    Every formula is written out; MODEL_FLOPS = 6·N·D (dense) or
+    6·N_active·D (MoE); the ratio MODEL_FLOPS / analytic-HLO-FLOPs exposes
+    remat recompute (≈0.75 for 1-recompute training) and attention/router
+    overheads.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI
+per chip.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
+                           shape_applicable)
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def _attn_ctx(cfg, shape):
+    """Average attended context length per query token."""
+    S = shape.seq_len
+    if shape.kind == "decode":
+        return min(S, cfg.sliding_window) if cfg.sliding_window else S
+    full = S / 2                                  # causal average
+    return min(full, cfg.sliding_window) if cfg.sliding_window else full
+
+
+def analytic(arch: str, shape_name: str, *, multi_pod: bool = False,
+             tp: int = 16) -> Optional[Dict]:
+    """``tp`` parameterizes the sharding plan: 16 = the 2-D baseline,
+    1 = pure FSDP (no activation ARs, full-param gathers), 2/4/8 = hybrid."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None
+    chips = 512 if multi_pod else 256
+    dp = chips // tp
+    N_active = cfg.param_count(active_only=True)
+    N_total = cfg.param_count()
+    P_BYTES = 2                                   # bf16 params/activations
+
+    # attention layers: all of the stack for dense/moe/vlm/audio; only the
+    # shared-block applications for the zamba2 hybrid; none for RWKV6
+    # (linear recurrence flops are folded into the projection param-flops).
+    if cfg.family == "ssm":
+        attn_layers = 0
+    elif cfg.family == "hybrid":
+        attn_layers = cfg.num_layers // max(1, cfg.shared_attn_every)
+    else:
+        attn_layers = cfg.num_layers + cfg.encoder_layers
+
+    if shape.kind == "decode":
+        tokens = shape.global_batch                 # one token per sequence
+        passes = 1.0                                # no backward
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        passes = 1.0
+    else:                                          # train: fwd + bwd(2x) + remat refwd
+        tokens = shape.global_batch * shape.seq_len
+        passes = 4.0
+
+    param_flops = 2.0 * N_active * tokens * passes
+    # per attention layer per token: 2·ctx·d_attn (QKᵀ) + 2·ctx·d_attn (AV)
+    attn_flops = 4.0 * cfg.q_dim * _attn_ctx(cfg, shape) * tokens * passes * attn_layers
+    hlo_flops = param_flops + attn_flops
+    model_flops = 6.0 * N_active * tokens if shape.kind == "train" \
+        else 2.0 * N_active * tokens
+
+    # ---- memory bytes (per step,全 chips) --------------------------------
+    if shape.kind == "train":
+        # params read fwd+bwd+remat (3×bf16) + grad write (bf16)
+        # + AdamW state read+write (2 moments + master, f32)
+        param_traffic = N_total * (4 * P_BYTES + 10 * 4)
+        act_traffic = tokens * cfg.d_model * (cfg.num_layers + cfg.encoder_layers) \
+            * P_BYTES * 8          # ~8 activation r/w per layer after fusion
+        ce_traffic = tokens * cfg.vocab_size * P_BYTES * 2 / 256 * 2  # chunked logits
+        kv_traffic = 0.0
+    elif shape.kind == "prefill":
+        param_traffic = N_total * P_BYTES
+        act_traffic = tokens * cfg.d_model * (cfg.num_layers + cfg.encoder_layers) * P_BYTES * 4
+        ce_traffic = shape.global_batch * cfg.vocab_size * P_BYTES
+        kv_traffic = 0.0
+    else:
+        param_traffic = N_active * P_BYTES          # every chip pass over its shard sums to one model pass
+        act_traffic = tokens * cfg.d_model * cfg.num_layers * P_BYTES * 4
+        ce_traffic = shape.global_batch * cfg.vocab_size * P_BYTES
+        ctx = _attn_ctx(cfg, shape)
+        if cfg.attn_kind == "mla":
+            per_tok_cache = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        elif cfg.family == "ssm":
+            per_tok_cache = 0       # constant state
+            ctx = cfg.num_heads * cfg.head_dim * cfg.head_dim / max(1, 1)  # state read once
+        else:
+            per_tok_cache = 2 * cfg.kv_dim
+        n_cache_layers = attn_layers if cfg.family == "hybrid" else cfg.num_layers
+        kv_traffic = (shape.global_batch * ctx * per_tok_cache * P_BYTES
+                      * n_cache_layers) if per_tok_cache else \
+            shape.global_batch * cfg.num_layers * cfg.num_heads * cfg.head_dim ** 2 * 4
+    hbm_bytes = param_traffic + act_traffic + ce_traffic + kv_traffic
+
+    # ---- collective bytes (wire, per chip) --------------------------------
+    n_passes_comm = 3.0 if shape.kind == "train" else 1.0
+    tokens_local = tokens / dp
+    coll = 0.0
+    if shape.kind == "train":
+        # FSDP: AG(params) fwd + AG bwd + RS(grads) over the data axis;
+        # payload per chip = its model-column slice of the params
+        coll += 3.0 * (N_total * P_BYTES / tp) * (dp - 1) / dp
+    # TP: 2 collectives per layer (attn out, mlp out), AR = 2× payload;
+    # with sequence-parallel AG+RS it is the same wire volume
+    coll += (2 * 2 * (cfg.num_layers + cfg.encoder_layers) * tokens_local
+             * cfg.d_model * P_BYTES * (tp - 1) / tp) * n_passes_comm
+    if cfg.is_moe:
+        coll += (2 * cfg.top_k * tokens_local * cfg.d_model * P_BYTES
+                 * (tp - 1) / tp) * n_passes_comm * (cfg.num_layers - cfg.first_dense_layers) / cfg.num_layers
+    if multi_pod and shape.kind == "train":
+        coll += 2.0 * (N_total * 4 / (dp * tp)) * 0.5   # cross-pod grad AR slice
+
+    t_compute = hlo_flops / chips / PEAK
+    t_memory = hbm_bytes / chips / HBM
+    t_coll = coll / ICI
+    dom = max((t_compute, "compute"), (t_memory, "memory"), (t_coll, "collective"))
+    return dict(arch=arch, shape=shape_name, mesh="2x16x16" if multi_pod else "16x16",
+                chips=chips,
+                compute_s=t_compute, memory_s=t_memory, collective_s=t_coll,
+                dominant=dom[1],
+                model_flops=model_flops, hlo_flops_analytic=hlo_flops,
+                useful_ratio=model_flops / hlo_flops,
+                hbm_bytes=hbm_bytes, coll_bytes_per_chip=coll)
+
+
+def load_dryrun(arch, shape_name, multi_pod=False, tag=""):
+    pod = "pod2" if multi_pod else "pod1"
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(DRYRUN_DIR, f"{arch}_{shape_name}_{pod}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(multi_pod: bool = False):
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        for shape_name in INPUT_SHAPES:
+            a = analytic(arch, shape_name, multi_pod=multi_pod)
+            if a is None:
+                rows.append(dict(table="roofline", arch=arch, shape=shape_name,
+                                 mesh="2x16x16" if multi_pod else "16x16",
+                                 status="skipped"))
+                continue
+            d = load_dryrun(arch, shape_name, multi_pod)
+            a.update(table="roofline",
+                     status=(d or {}).get("status", "missing"),
+                     peak_gib=round((d or {}).get("memory", {}).get("peak_bytes", 0) / 2 ** 30, 2),
+                     raw_hlo_flops=(d or {}).get("flops", 0),
+                     raw_coll_bytes=sum(v for k, v in (d or {}).get("collectives", {}).items()
+                                        if k != "count"))
+            rows.append(a)
+    return rows
+
+
+def headline(rows):
+    ok = [r for r in rows if r.get("status") == "ok"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return [("roofline.compiled_combos", len(ok), "of 33 applicable"),
+            ("roofline.dominant_split", str(doms), "bottleneck census")]

@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints the ``name,value,derived`` headline CSV (one row per paper claim)
+and writes the full per-config tables to experiments/bench/<name>.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+MODULES = ["contention_sweep", "priority_demo", "end_to_end", "breakdown",
+           "convergence", "roofline"]
+
+
+def _write_csv(name, rows):
+    if not rows:
+        return
+    os.makedirs(OUT, exist_ok=True)
+    keys = sorted({k for r in rows for k in r})
+    with open(os.path.join(OUT, f"{name}.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    mods = [args.only] if args.only else MODULES
+    print("name,value,derived")
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        kw = {}
+        if name == "end_to_end" and args.fast:
+            kw["fast"] = True
+        rows = mod.run(**kw)
+        _write_csv(name, rows)
+        if name == "roofline":
+            rows2 = mod.run(multi_pod=True)
+            _write_csv("roofline_pod2", rows2)
+        for key, val, derived in mod.headline(rows):
+            if isinstance(val, float):
+                val = f"{val:.4g}"
+            print(f"{key},{val},{derived}")
+        print(f"_timing.{name},{time.time()-t0:.1f}s,", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Lagom core: the paper's contribution.
+
+  comm_params — the six tunable collective parameters (s_j)
+  workload    — overlap-group IR (CompOp / CommOp / OverlapGroup)
+  hardware    — cluster profiles (A40-PCIe, A40-NVLink, TPU v5e)
+  contention  — Eqs. 4–6 + communication-time model
+  cost_model  — Eqs. 1–3 closed form
+  simulator   — event-driven ProfileTime oracle
+  priority    — metric H (Eq. 7)
+  tuner       — Algorithms 1–2 (Lagom)
+  autoccl     — AutoCCL baseline tuner
+  baselines   — NCCL/XLA default configs
+  extract     — model × plan × shape -> Workload
+  apply       — tuned configs -> JAX runtime knobs (chunked collectives)
+"""
+from repro.core.comm_params import CommConfig, min_config, vendor_default
+from repro.core.extract import ParallelPlan, extract_workload
+from repro.core.hardware import A40_NVLINK, A40_PCIE, PROFILES, TPU_V5E, Hardware
+from repro.core.simulator import Measurement, Simulator
+from repro.core.workload import CommOp, CompOp, OverlapGroup, Workload
+
+__all__ = [
+    "CommConfig", "min_config", "vendor_default",
+    "ParallelPlan", "extract_workload",
+    "Hardware", "A40_PCIE", "A40_NVLINK", "TPU_V5E", "PROFILES",
+    "Simulator", "Measurement",
+    "CompOp", "CommOp", "OverlapGroup", "Workload",
+]

@@ -1,0 +1,45 @@
+"""Map tuned ``CommConfig``s onto JAX runtime knobs.
+
+XLA collectives are compile-time constructs (DESIGN.md §2 deviation 2), so
+"applying" a tuned config means choosing the chunked/ring implementations
+in ``parallel.collectives`` and their chunk counts, then re-lowering.
+
+  chunk_kb  -> num_chunks = ceil(payload / chunk)
+  algorithm -> strategy: ring -> explicit ppermute ring, tree/bidir ->
+               "chunked" scan of partial collectives, vendor default -> xla
+  nc        -> no HLO footprint (DMA concurrency); consumed by the
+               simulator and recorded for deployment (XLA flags).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+from repro.core.comm_params import CommConfig
+from repro.core.workload import ConfigSet, Workload
+from repro.parallel.collectives import CollectiveRuntime
+
+MAX_CHUNKS = 16      # scheduler-friendly cap: beyond this, per-chunk launch
+                     # overhead dominates (same cliff as the paper's Fig. 3c)
+
+
+def to_runtime(cfg: CommConfig, payload_bytes: float) -> CollectiveRuntime:
+    chunks = max(1, math.ceil(payload_bytes / (cfg.chunk_kb * 1024.0)))
+    chunks = min(MAX_CHUNKS, chunks)
+    if cfg.algorithm == "ring":
+        strategy = "ring"
+    elif cfg.algorithm in ("tree", "bidir"):
+        strategy = "chunked"
+    else:
+        strategy = "xla"
+    return CollectiveRuntime(strategy=strategy, num_chunks=chunks)
+
+
+def runtime_plan(wl: Workload, configs: ConfigSet) -> Dict[str, CollectiveRuntime]:
+    """Per-site runtime plan keyed by the CommOp name prefix (site class)."""
+    plan: Dict[str, CollectiveRuntime] = {}
+    for (gi, ci), cfg in configs.items():
+        op = wl.groups[gi].comms[ci]
+        key = op.name.split(".")[0]        # ag / rs / ar / a2a site class
+        plan.setdefault(key, to_runtime(cfg, op.bytes))
+    return plan

@@ -1,0 +1,10 @@
+"""Un-tuned baseline configurations (NCCL defaults / XLA defaults)."""
+from __future__ import annotations
+
+from repro.core.comm_params import CommConfig, vendor_default
+from repro.core.workload import ConfigSet, Workload
+
+
+def nccl_defaults(wl: Workload, hw) -> ConfigSet:
+    cfg = vendor_default(hw)
+    return {site: cfg for site in wl.comm_sites()}

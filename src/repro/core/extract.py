@@ -1,0 +1,197 @@
+"""Lower (ModelConfig × ParallelPlan × InputShape) into the Workload IR.
+
+Overlap structure per parallelism (paper Fig. 2):
+  * FSDP: layer-i compute ‖ AllGather(layer i+1 params); backward:
+    layer-i grads ‖ [AllGather(params i−1), ReduceScatter(grads i)]
+    (the two-comm window of the paper's Pattern 2).
+  * TP (Domino-style batch pipelining): attention compute of microbatch b
+    ‖ AllReduce of microbatch b−1, same for the MLP half.
+  * EP (dual-batch): expert FFN of one half-batch ‖ AlltoAll
+    dispatch/combine of the other half.
+
+Compute operators carry FLOPs / bytes / threadblock counts so the
+contention model (Eqs. 4–6) can price them.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.core.workload import CommOp, CompOp, OverlapGroup, Workload, matmul_comp
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    kind: str          # "fsdp" | "tp" | "ep" | "pp"
+    dp: int = 1        # data-parallel degree (FSDP shard count for "fsdp")
+    tp: int = 1
+    ep: int = 1
+    pp: int = 1        # pipeline stages
+    microbatches: int = 2      # Domino / dual-batch pipelining depth
+    dsize: int = 2             # bytes per element (bf16)
+
+    @property
+    def world(self) -> int:
+        return max(self.dp, 1) * max(self.tp, 1) * max(self.ep, 1)
+
+
+# ---------------------------------------------------------------------------
+# per-layer compute ops
+# ---------------------------------------------------------------------------
+
+def _attn_ops(cfg, m: int, seq: int, batch_local: int, tp: int, dsize: int,
+              tag: str) -> List[CompOp]:
+    hd = cfg.head_dim
+    hq = max(1, cfg.num_heads // tp)
+    hkv = max(1, cfg.num_kv_heads // tp)
+    ops = [
+        matmul_comp(f"{tag}.qkv", m, cfg.d_model, (hq + 2 * hkv) * hd, dsize),
+    ]
+    ctx = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    sdpa_flops = 2 * 2 * batch_local * hq * seq * ctx * hd / 2  # causal half
+    sdpa_bytes = dsize * batch_local * seq * (hq + 2 * hkv + hq) * hd
+    mu = max(1, batch_local * hq * math.ceil(seq / 128) * math.ceil(min(ctx, seq) / 512))
+    ops.append(CompOp(f"{tag}.sdpa", sdpa_flops, sdpa_bytes, mu))
+    ops.append(matmul_comp(f"{tag}.o", m, hq * hd, cfg.d_model, dsize))
+    return ops
+
+
+def _mlp_ops(cfg, m: int, tp: int, dsize: int, tag: str) -> List[CompOp]:
+    f = max(1, cfg.d_ff // tp)
+    n_in = 2 if cfg.mlp_kind == "swiglu" else 1
+    ops = [matmul_comp(f"{tag}.up{i}", m, cfg.d_model, f, dsize) for i in range(n_in)]
+    ops.append(matmul_comp(f"{tag}.down", m, f, cfg.d_model, dsize))
+    return ops
+
+
+def _expert_ops(cfg, tokens_local: int, ep: int, dsize: int, tag: str) -> List[CompOp]:
+    # balanced routing: each device computes tokens_local·top_k expert-token
+    # pairs across its num_experts/ep local experts
+    m = max(1, tokens_local * cfg.top_k)
+    f = cfg.moe_d_ff
+    ops = [matmul_comp(f"{tag}.e_up{i}", m, cfg.d_model, f, dsize) for i in range(2)]
+    ops.append(matmul_comp(f"{tag}.e_down", m, f, cfg.d_model, dsize))
+    if cfg.num_shared_experts:
+        sf = cfg.shared_d_ff or cfg.moe_d_ff * cfg.num_shared_experts
+        ops += [matmul_comp(f"{tag}.s_up{i}", tokens_local, cfg.d_model, sf, dsize)
+                for i in range(2)]
+        ops.append(matmul_comp(f"{tag}.s_down", tokens_local, sf, cfg.d_model, dsize))
+    return ops
+
+
+def _layer_param_bytes(cfg, dsize: int) -> float:
+    per_layer = cfg.param_count() - cfg.vocab_size * cfg.d_model * (
+        1 if cfg.tie_embeddings else 2)
+    return per_layer / max(1, cfg.num_layers) * dsize
+
+
+def _scale(ops: List[CompOp], s: float, suffix: str) -> List[CompOp]:
+    return [CompOp(o.name + suffix, o.flops * s, o.bytes_rw * s,
+                   max(1, int(o.threadblocks * s)), o.tb_per_slot)
+            for o in ops]
+
+
+# ---------------------------------------------------------------------------
+# workload builders
+# ---------------------------------------------------------------------------
+
+def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
+                     decode: bool = False, layers: Optional[int] = None) -> Workload:
+    L = layers or cfg.num_layers
+    dsize = plan.dsize
+    if decode:
+        seq_q = 1
+    else:
+        seq_q = seq
+    batch_local = max(1, global_batch // max(1, plan.dp))
+    m = batch_local * seq_q
+    groups: List[OverlapGroup] = []
+
+    if plan.kind == "fsdp":
+        n = plan.dp
+        pbytes = _layer_param_bytes(cfg, dsize)
+        comp = (_attn_ops(cfg, m, seq, batch_local, 1, dsize, "attn")
+                + _mlp_ops(cfg, m, 1, dsize, "mlp"))
+        for i in range(L):
+            groups.append(OverlapGroup(
+                f"fwd.L{i}", comps=list(comp),
+                comms=[CommOp(f"ag.L{i + 1}", "allgather", pbytes, n)]))
+        if not decode:
+            bcomp = _scale(comp, 2.0, ".bwd")
+            for i in range(L):
+                groups.append(OverlapGroup(
+                    f"bwd.L{i}", comps=list(bcomp),
+                    comms=[CommOp(f"ag.L{i - 1}", "allgather", pbytes, n),
+                           CommOp(f"rs.L{i}", "reducescatter", pbytes, n)]))
+
+    elif plan.kind == "tp":
+        n = plan.tp
+        mb = max(1, plan.microbatches)
+        m_mb = max(1, m // mb)
+        b_mb = max(1, batch_local // mb)
+        ar_bytes = m_mb * cfg.d_model * dsize
+        attn = _attn_ops(cfg, m_mb, seq, b_mb, n, dsize, "attn")
+        mlp = _mlp_ops(cfg, m_mb, n, dsize, "mlp")
+        passes = [("fwd", 1.0)] if decode else [("fwd", 1.0), ("bwd", 2.0)]
+        for pname, s in passes:
+            for i in range(L):
+                groups.append(OverlapGroup(
+                    f"{pname}.L{i}.attn",
+                    comps=_scale(attn, s * mb, f".{pname}"),
+                    comms=[CommOp(f"ar.attn.{pname}.L{i}.mb{b}", "allreduce",
+                                  ar_bytes * s, n) for b in range(mb)]))
+                groups.append(OverlapGroup(
+                    f"{pname}.L{i}.mlp",
+                    comps=_scale(mlp, s * mb, f".{pname}"),
+                    comms=[CommOp(f"ar.mlp.{pname}.L{i}.mb{b}", "allreduce",
+                                  ar_bytes * s, n) for b in range(mb)]))
+
+    elif plan.kind == "pp":
+        # GPipe fill+drain: per tick, each stage's compute overlaps the
+        # ppermute of the previous tick's activations to the next stage.
+        n = max(2, plan.pp)
+        layers_per_stage = max(1, L // n)
+        mb = max(1, plan.microbatches)
+        m_mb = max(1, m // mb)
+        b_mb = max(1, batch_local // mb)
+        stage_comp = (_attn_ops(cfg, m_mb, seq, b_mb, 1, dsize, "attn")
+                      + _mlp_ops(cfg, m_mb, 1, dsize, "mlp"))
+        stage_comp = _scale(stage_comp, float(layers_per_stage), ".stage")
+        act_bytes = m_mb * cfg.d_model * dsize
+        passes = [("fwd", 1.0)] if decode else [("fwd", 1.0), ("bwd", 2.0)]
+        for pname, s in passes:
+            for t in range(n + mb - 1):
+                groups.append(OverlapGroup(
+                    f"{pname}.tick{t}",
+                    comps=_scale(stage_comp, s, f".{pname}"),
+                    comms=[CommOp(f"p2p.{pname}.t{t}", "permute",
+                                  act_bytes * s, n)]))
+
+    elif plan.kind == "ep":
+        n = plan.ep
+        tokens_local = m
+        halves = 2
+        t_half = max(1, tokens_local // halves)
+        a2a_bytes = t_half * cfg.top_k * cfg.d_model * dsize / n
+        attn = _attn_ops(cfg, m, seq, batch_local, 1, dsize, "attn")
+        experts = _expert_ops(cfg, t_half, n, dsize, "moe")
+        moe_layers = max(1, L - cfg.first_dense_layers)
+        passes = [("fwd", 1.0)] if decode else [("fwd", 1.0), ("bwd", 2.0)]
+        for pname, s in passes:
+            for i in range(moe_layers):
+                groups.append(OverlapGroup(
+                    f"{pname}.L{i}.attn", comps=_scale(attn, s, f".{pname}"), comms=[]))
+                groups.append(OverlapGroup(
+                    f"{pname}.L{i}.moe",
+                    comps=_scale(experts, s * halves, f".{pname}"),
+                    comms=[CommOp(f"a2a.{d}.{pname}.L{i}.h{h}", "alltoall",
+                                  a2a_bytes * s, n)
+                           for h in range(halves) for d in ("disp", "comb")]))
+    else:
+        raise ValueError(plan.kind)
+
+    total_flops = sum(g.total_flops for g in groups)
+    return Workload(name=f"{cfg.name}:{plan.kind}", groups=groups,
+                    meta={"flops": total_flops, "seq": seq,
+                          "global_batch": global_batch})

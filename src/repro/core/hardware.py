@@ -1,0 +1,89 @@
+"""Hardware profiles for the contention model / overlap simulator.
+
+The paper evaluates on two 16×A40 clusters (NVLink and PCIe variants);
+those profiles drive the paper-faithful reproduction.  The TPU v5e profile
+drives the deployment-target tuning (DESIGN.md §2): λ becomes the pool of
+concurrent occupancy slots (VMEM-resident tile slots) and "channels" become
+concurrent DMA streams that consume slots + HBM bandwidth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16/fp16 (theoretical)
+    gemm_eff: float            # achieved fraction of peak on real kernels
+    hbm_bw: float              # B̄: peak global memory bandwidth (B/s)
+    link_bw: float             # achieved interconnect bus bandwidth (B/s)
+    num_slots: int             # λ: SMs (GPU) / occupancy slots (TPU)
+    chan_bw: float             # per-channel link bandwidth (B/s)
+    chunk_half_kb: float       # chunk size at which a channel hits 50% efficiency
+    launch_us: float           # per-collective launch overhead (µs)
+    chunk_us: float            # per-chunk processing overhead (µs)
+    comm_comp_beta: float = 0.15   # comm slowdown fraction when compute is active
+    default_nc: int = 8        # vendor-default channels (NCCL: 8; larger on NVLink)
+    default_chunk_kb: int = 2048
+    # staging-footprint interference: NC·C bytes of communication staging
+    # buffers evict the compute working set from L2 (GPU) / VMEM (TPU),
+    # stalling compute pipelines by up to ``interference_gamma``.
+    cache_kb: int = 6144
+    interference_gamma: float = 0.35
+
+    @property
+    def achieved_flops(self) -> float:
+        return self.peak_flops * self.gemm_eff
+
+
+# Calibration anchors (paper Fig. 3, 8×A40): with λ=84 SMs and one resident
+# block per SM, the wave model gives (84−16)/(84−32) = +30.8% FFN slowdown
+# for NC 16→32 — the paper measures +30.2%.  Link numbers are achieved NCCL
+# bus bandwidths, not line rates.
+A40_PCIE = Hardware(
+    name="a40-pcie",
+    peak_flops=149.7e12 / 2,       # dense fp16 tensor
+    gemm_eff=0.55,
+    hbm_bw=696e9,
+    link_bw=16e9,                  # PCIe 4.0 x16 achieved busbw
+    num_slots=84,                  # GA102 SMs
+    chan_bw=3.5e9,
+    chunk_half_kb=128.0,
+    launch_us=12.0,
+    chunk_us=1.5,
+    default_nc=8,
+    default_chunk_kb=2048,
+)
+
+A40_NVLINK = Hardware(
+    name="a40-nvlink",
+    peak_flops=149.7e12 / 2,
+    gemm_eff=0.55,
+    hbm_bw=696e9,
+    link_bw=20e9,                  # 400 Gbps NVLink achieved busbw
+    num_slots=84,
+    chan_bw=6e9,
+    chunk_half_kb=96.0,
+    launch_us=8.0,
+    chunk_us=1.0,
+    default_nc=16,                 # NCCL widens channels on NVLink (Sec. 4.2)
+    default_chunk_kb=4096,
+)
+
+TPU_V5E = Hardware(
+    name="tpu-v5e",
+    peak_flops=197e12,             # bf16
+    gemm_eff=0.55,
+    hbm_bw=819e9,
+    link_bw=42e9,                  # ICI achieved (~0.85 × 50 GB/s)
+    num_slots=128,                 # VMEM-resident tile slots (occupancy pool)
+    chan_bw=12.5e9,                # one ICI link direction
+    chunk_half_kb=256.0,
+    launch_us=2.0,
+    chunk_us=0.6,
+    default_nc=4,                  # XLA default: all links, bulk chunks
+    default_chunk_kb=4096,
+)
+
+PROFILES = {h.name: h for h in (A40_PCIE, A40_NVLINK, TPU_V5E)}

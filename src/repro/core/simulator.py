@@ -1,0 +1,124 @@
+"""Event-driven overlap simulator — the ProfileTime oracle.
+
+Plays the role of the paper's online profiling step (DESIGN.md §2 deviation
+1): two serialized streams (computation / communication) advance in
+continuous time; whichever communication is active at an instant sets the
+computation's instantaneous rate via the contention model, and vice versa
+(reciprocal bandwidth steal).  The tuners treat this as a black box:
+``profile(workload, configs) -> Measurement``.
+
+Optional multiplicative lognormal noise emulates real measurement jitter so
+the search algorithms cannot overfit exact model values.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import contention as C
+from repro.core.comm_params import CommConfig
+from repro.core.hardware import Hardware
+from repro.core.workload import ConfigSet, OverlapGroup, Workload
+
+
+@dataclass
+class GroupMeasurement:
+    name: str
+    Z: float                       # group makespan
+    X: float                       # total communication busy time
+    Y: float                       # total computation busy time
+    comm_times: List[float]        # measured x_j (with contention)
+    comp_times: List[float]        # measured y_i (with contention)
+
+
+@dataclass
+class Measurement:
+    Z: float                       # iteration makespan (Σ group makespans)
+    groups: List[GroupMeasurement]
+
+    @property
+    def X(self):
+        return sum(g.X for g in self.groups)
+
+    @property
+    def Y(self):
+        return sum(g.Y for g in self.groups)
+
+
+class Simulator:
+    def __init__(self, hw: Hardware, *, noise: float = 0.0, seed: int = 0):
+        self.hw = hw
+        self.noise = noise
+        self._rng = np.random.default_rng(seed)
+        self.profile_count = 0     # tuning-efficiency accounting (Fig. 8c)
+
+    # -- single overlap group --------------------------------------------
+    def run_group(self, g: OverlapGroup, cfgs: List[CommConfig]) -> GroupMeasurement:
+        assert len(cfgs) == len(g.comms)
+        hw = self.hw
+        jit = (lambda: float(self._rng.lognormal(0.0, self.noise))) if self.noise \
+            else (lambda: 1.0)
+
+        # remaining work is tracked in fractions of each op
+        comp_left = [1.0] * len(g.comps)
+        comm_left = [1.0] * len(g.comms)
+        comp_busy = comm_busy = 0.0
+        comm_meas = [0.0] * len(g.comms)
+        comp_meas = [0.0] * len(g.comps)
+        jit_comp = [jit() for _ in g.comps]
+        jit_comm = [jit() for _ in g.comms]
+        ci = ki = 0                 # heads of comp / comm streams
+        t = 0.0
+        guard = 0
+        while ci < len(g.comps) or ki < len(g.comms):
+            guard += 1
+            if guard > 100000:
+                raise RuntimeError("simulator did not converge")
+            active_cfg = cfgs[ki] if ki < len(g.comms) else None
+            comp_active = ci < len(g.comps)
+
+            comp_rate_dur = comm_rate_dur = math.inf
+            if comp_active:
+                comp_rate_dur = C.comp_time(g.comps[ci], active_cfg, hw) * jit_comp[ci]
+            if ki < len(g.comms):
+                comm_rate_dur = C.comm_time(g.comms[ki], cfgs[ki], hw,
+                                            compute_active=comp_active) * jit_comm[ki]
+
+            dt_options = []
+            if comp_active:
+                dt_options.append(comp_left[ci] * comp_rate_dur)
+            if ki < len(g.comms):
+                dt_options.append(comm_left[ki] * comm_rate_dur)
+            dt = min(dt_options)
+            t += dt
+            if comp_active:
+                comp_busy += dt
+                comp_meas[ci] += dt
+                comp_left[ci] -= dt / comp_rate_dur
+                if comp_left[ci] <= 1e-12:
+                    ci += 1
+            if ki < len(g.comms):
+                comm_busy += dt
+                comm_meas[ki] += dt
+                comm_left[ki] -= dt / comm_rate_dur
+                if comm_left[ki] <= 1e-12:
+                    ki += 1
+
+        return GroupMeasurement(name=g.name, Z=t, X=comm_busy, Y=comp_busy,
+                                comm_times=comm_meas, comp_times=comp_meas)
+
+    # -- full workload ------------------------------------------------------
+    def profile(self, wl: Workload, configs: ConfigSet) -> Measurement:
+        self.profile_count += 1
+        gms = []
+        for gi, g in enumerate(wl.groups):
+            cfgs = [configs[(gi, ci)] for ci in range(len(g.comms))]
+            gms.append(self.run_group(g, cfgs))
+        return Measurement(Z=sum(g.Z for g in gms), groups=gms)
+
+    def profile_group(self, g: OverlapGroup, cfgs: List[CommConfig]) -> GroupMeasurement:
+        self.profile_count += 1
+        return self.run_group(g, cfgs)

@@ -1,0 +1,94 @@
+"""Workload IR: what the tuner sees — overlap groups of computation and
+communication operators (the M comps and N comms of Eq. 1).
+
+The IR is framework-neutral: ``core.extract`` lowers a (model config ×
+parallel plan × input shape) into this IR; the simulator executes it; the
+tuners only ever see (Workload, configs) -> times.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.comm_params import CommConfig
+
+COMM_KINDS = ("allgather", "reducescatter", "allreduce", "alltoall", "permute")
+
+
+@dataclass
+class CompOp:
+    """One computation operator (cuBLAS/cuDNN kernel; TPU fused region)."""
+    name: str
+    flops: float
+    bytes_rw: float
+    threadblocks: int          # μ_i — total blocks (tiles) to schedule
+    tb_per_slot: int = 1       # TB_i — resident blocks per SM/slot
+    bytes_per_tb: float = 0.0  # D_i — bytes moved per block
+
+    def __post_init__(self):
+        if not self.bytes_per_tb and self.threadblocks:
+            self.bytes_per_tb = self.bytes_rw / self.threadblocks
+
+
+@dataclass
+class CommOp:
+    """One collective in the serialized communication stream."""
+    name: str
+    kind: str                  # one of COMM_KINDS
+    bytes: float               # payload per chip
+    group_size: int = 8        # participating chips on its mesh axis
+
+    def __post_init__(self):
+        assert self.kind in COMM_KINDS, self.kind
+
+
+@dataclass
+class OverlapGroup:
+    """One overlap window: comps run on the computation stream, comms on the
+    (serialized) communication stream; makespan = max(X, Y) + unhidden."""
+    name: str
+    comps: List[CompOp] = field(default_factory=list)
+    comms: List[CommOp] = field(default_factory=list)
+
+    @property
+    def total_flops(self) -> float:
+        return sum(c.flops for c in self.comps)
+
+    @property
+    def total_comm_bytes(self) -> float:
+        return sum(c.bytes for c in self.comms)
+
+
+@dataclass
+class Workload:
+    """A training iteration (or serving step): sequence of overlap groups."""
+    name: str
+    groups: List[OverlapGroup]
+    meta: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def num_comms(self) -> int:
+        return sum(len(g.comms) for g in self.groups)
+
+    def comm_sites(self) -> List[Tuple[int, int]]:
+        """(group_idx, comm_idx) for every tunable communication."""
+        return [(gi, ci) for gi, g in enumerate(self.groups)
+                for ci in range(len(g.comms))]
+
+
+ConfigSet = Dict[Tuple[int, int], CommConfig]
+
+
+def uniform_configs(wl: Workload, cfg: CommConfig) -> ConfigSet:
+    return {site: cfg for site in wl.comm_sites()}
+
+
+def matmul_comp(name: str, m: int, k: int, n: int, dsize: int = 2, *,
+                tile: int = 128, tb_per_slot: int = 1) -> CompOp:
+    """Helper: a GEMM's CompOp with tile-derived threadblock count."""
+    flops = 2.0 * m * k * n
+    bytes_rw = float(dsize) * (m * k + k * n + m * n)
+    mu = max(1, math.ceil(m / tile) * math.ceil(n / tile))
+    return CompOp(name=name, flops=flops, bytes_rw=bytes_rw,
+                  threadblocks=mu, tb_per_slot=tb_per_slot)

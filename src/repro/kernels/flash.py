@@ -1,0 +1,102 @@
+"""Causal flash-attention Pallas TPU kernel (GQA-aware), forward pass.
+
+Grid: (B·Hq, Sq/QB, Sk/KB) with the KV axis sequential ("arbitrary") —
+running max / denominator / accumulator live in VMEM scratch across KV
+block iterations; (batch·head, q-block) axes are parallel.  Used for
+inference prefill (the training path keeps the pure-JAX two-axis blockwise
+attention in models/layers.py, which autodiffs); validated in interpret
+mode against that reference.
+
+VMEM per step (QB=KB=256, h=128, fp32): q/k/v blocks 3·256·128·4 = 384 KB,
+acc 128 KB, m/l 2 KB — MXU-aligned (q·kᵀ is 256×128·128ᵀ).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  scale: float, qb: int, kb: int, causal: bool):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # skip fully-masked blocks (k start beyond q end)
+    run = (not causal) or (ki * kb <= qi * qb + qb - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)        # (qb,h)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (kb,h)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = (q @ k.T) * scale                            # (qb,kb)
+        if causal:
+            qpos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)
+            kpos = ki * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev, l_prev = m_s[...], l_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_prev * corr + p.sum(axis=-1)
+        acc_s[...] = acc_s[...] * corr[:, None] + p @ v
+        m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (acc_s[...] /
+                             jnp.maximum(l_s[...], 1e-20)[:, None]
+                             ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 256,
+                    kv_block: int = 256, interpret: bool = True):
+    """q (B,Sq,Hq,h); k,v (B,Sk,Hkv,h) with Hq % Hkv == 0 (GQA)."""
+    B, Sq, Hq, h = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    assert Sq % qb == 0 and Sk % kb == 0, "pad sequences to block multiples"
+    scale = 1.0 / math.sqrt(h)
+
+    q_spec = pl.BlockSpec((1, qb, 1, h), lambda b, qi, ki: (b // Hq, qi, b % Hq, 0))
+    kv_spec = pl.BlockSpec((1, kb, 1, h),
+                           lambda b, qi, ki: (b // Hq, ki, (b % Hq) // G, 0))
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, qb=qb, kb=kb,
+                          causal=causal),
+        grid=(B * Hq, Sq // qb, Sk // kb),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, h), q.dtype),
+        scratch_shapes=[_vmem((qb,), jnp.float32), _vmem((qb,), jnp.float32),
+                        _vmem((qb, h), jnp.float32)],
+        interpret=interpret,
+        compiler_params=None if interpret else _tpu_params(),
+    )(q, k, v)
+    return out
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _tpu_params():
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))

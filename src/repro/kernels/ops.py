@@ -1,0 +1,77 @@
+"""Public jit'd entry points for the kernel layer.
+
+``backend``:
+  * "ref"      — naive per-step jnp scan (exact oracle)
+  * "chunked"  — chunked matmul-form jnp (same algorithm as the Pallas kernel;
+                 the default: MXU-friendly, sub-quadratic activation memory)
+  * "pallas"   — the Pallas TPU kernel (interpret=True on CPU)
+
+The model code always calls these wrappers; the dry-run path uses "chunked"
+(pure jnp lowers on any backend), tests sweep all three against "ref".
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+_DEFAULT = "chunked"
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT
+    assert name in ("ref", "chunked", "pallas")
+    _DEFAULT = name
+
+
+def default_backend() -> str:
+    return _DEFAULT
+
+
+def _pad_seq(a, mult):
+    S = a.shape[1]
+    pad = (-S) % mult
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    return a, S
+
+
+def wkv6(r, k, v, w_log, u, state=None, *, backend: str | None = None, chunk: int = 32):
+    """RWKV6 WKV. r,k,v,w_log (B,S,H,K); u (H,K) -> y (B,S,H,V), state (B,H,K,V)."""
+    backend = backend or _DEFAULT
+    if backend == "ref" or r.shape[1] == 1:
+        return _ref.wkv6_ref(r, k, v, w_log, u, state)
+    if backend == "chunked":
+        (r, S0), (k, _), (v, _), (w_log, _) = (_pad_seq(a, chunk) for a in (r, k, v, w_log))
+        y, st = _ref.wkv6_chunked_ref(r, k, v, w_log, u, state, chunk=chunk)
+        return y[:, :S0], st
+    from repro.kernels import wkv6 as _pk
+    (r, S0), (k, _), (v, _), (w_log, _) = (_pad_seq(a, chunk) for a in (r, k, v, w_log))
+    y, st = _pk.wkv6_pallas(r, k, v, w_log, u, state, chunk=chunk)
+    return y[:, :S0], st
+
+
+def ssd(x, dt, A, Bm, Cm, D, state=None, *, backend: str | None = None, chunk: int = 64):
+    """Mamba2 SSD. x (B,S,H,P); dt (B,S,H); A,D (H,); Bm,Cm (B,S,H,N)."""
+    backend = backend or _DEFAULT
+    if backend == "ref" or x.shape[1] == 1:
+        return _ref.ssd_ref(x, dt, A, Bm, Cm, D, state)
+    if backend == "chunked":
+        (x, S0), (dt, _), (Bm, _), (Cm, _) = (_pad_seq(a, chunk) for a in (x, dt, Bm, Cm))
+        y, st = _ref.ssd_chunked_ref(x, dt, A, Bm, Cm, D, state, chunk=chunk)
+        return y[:, :S0], st
+    from repro.kernels import ssd as _pk
+    (x, S0), (dt, _), (Bm, _), (Cm, _) = (_pad_seq(a, chunk) for a in (x, dt, Bm, Cm))
+    y, st = _pk.ssd_pallas(x, dt, A, Bm, Cm, D, state, chunk=chunk)
+    return y[:, :S0], st
+
+
+def rmsnorm(x, scale, *, backend: str | None = None, eps: float = 1e-5):
+    backend = backend or _DEFAULT
+    if backend in ("ref", "chunked"):
+        return _ref.rmsnorm_ref(x, scale, eps)
+    from repro.kernels import rmsnorm as _pk
+    return _pk.rmsnorm_pallas(x, scale, eps=eps)

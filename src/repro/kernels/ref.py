@@ -1,0 +1,182 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references (`tests/test_kernels.py` sweeps shapes
+and dtypes against them) and the default CPU execution path selected by
+``kernels.ops``.  Naive per-timestep scans — O(S) sequential steps — written
+for clarity, not speed.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 "Finch" WKV — data-dependent per-channel decay
+#   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+#   y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+# ---------------------------------------------------------------------------
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w_log: jnp.ndarray,
+             u: jnp.ndarray, state: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w_log: (B,S,H,K); u: (H,K); state: (B,H,K,V) or None.
+
+    w_log is log-decay (≤ 0, i.e. w = exp(w_log) ∈ (0,1]).
+    Returns y (B,S,H,V) and the final state (B,H,K,V).  fp32 internally.
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = w_log.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+    else:
+        state = state.astype(jnp.float32)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, wl_t = inp                      # (B,H,K) each
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + uf[None, :, :, None] * kv)
+        S_ = jnp.exp(wl_t)[..., :, None] * S_ + kv
+        return S_, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    state, ys = lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), state
+
+
+def wkv6_chunked_ref(r, k, v, w_log, u, state=None, *, chunk: int = 64):
+    """Chunked (matmul-form) WKV — the algorithm the Pallas kernel implements.
+    Mathematically identical to wkv6_ref; used to validate the chunking."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    Q = chunk
+    n = S // Q
+    rs = (lambda a: jnp.moveaxis(a.reshape(B, n, Q, H, K), 1, 0).astype(jnp.float32))
+    rf, kf, vf, wf = rs(r), rs(k), rs(v), rs(w_log)
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+    else:
+        state = state.astype(jnp.float32)
+
+    def chunk_step(S0, inp):
+        rq, kq, vq, wq = inp                      # (B,Q,H,K)
+        cw = jnp.cumsum(wq, axis=1) - wq          # exclusive cumsum: Σ_{τ<t} w
+        cw_end = jnp.sum(wq, axis=1)              # (B,H,K)
+        # inter-chunk: y_t += (r_t ⊙ exp(cw_t)) · S0   (cw_t ≤ 0: safe)
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", rq * jnp.exp(cw), S0)
+        # intra-chunk: A[t,s] = Σ_K r_t exp(cw_t − cw_s − w_s) k_s  (s < t)
+        #              A[t,t] = Σ_K r_t u k_t
+        # exponent formed as a difference BEFORE exp so it is ≤ 0 for s < t
+        # (factoring into exp(cw_t)·exp(−cw_s−w_s) overflows for long chunks).
+        dmat = cw[:, :, None] - cw[:, None] - wq[:, None]        # (B,Q,Q,H,K)
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)[None, :, :, None, None]
+        # mask the EXPONENT (not the exp) — exp of the masked-out s>t branch
+        # is inf and poisons the where-gradient (inf · 0 = NaN in backward)
+        P = jnp.where(mask, jnp.exp(jnp.where(mask, dmat, 0.0)), 0.0)
+        A = jnp.einsum("bqhk,bshk,bqshk->bhqs", rq, kq, P)
+        A_diag = jnp.einsum("bqhk,hk,bqhk->bqh", rq, uf, kq)
+        y = y_inter + jnp.einsum("bhqs,bshv->bqhv", A, vq) \
+            + A_diag[..., None] * vq
+        # state update: S = diag(e^{cw_end}) S0 + Σ_s e^{cw_end − cw_s − w_s} k_s v_s^T
+        carry_k = kq * jnp.exp(cw_end[:, None] - cw - wq)
+        S_new = jnp.exp(cw_end)[..., None] * S0 \
+            + jnp.einsum("bshk,bshv->bhkv", carry_k, vq)
+        return S_new, y
+
+    state, ys = lax.scan(chunk_step, state, (rf, kf, vf, wf))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, V)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD — scalar-identity state space
+#   h_t = exp(dt_t·A) h_{t-1} + (dt_t x_t) ⊗ B_t ;  y_t = h_t · C_t + D x_t
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, Bm: jnp.ndarray,
+            Cm: jnp.ndarray, D: jnp.ndarray, state: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,H,P); dt: (B,S,H) (post-softplus, >0); A: (H,) (<0);
+    Bm, Cm: (B,S,H,N) (already expanded from groups to heads); D: (H,).
+    Returns y (B,S,H,P), final state (B,H,P,N)."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B_, H, P, N), jnp.float32)
+    else:
+        state = state.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                  # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(dt_t * Af)                 # (B,H)
+        h = decay[..., None, None] * h \
+            + (dt_t[..., None] * x_t)[..., None] * B_t[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, C_t) + Df[None, :, None] * x_t
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    state, ys = lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, D, state=None, *, chunk: int = 64):
+    """Chunked SSD (Mamba-2 paper block decomposition) — what the Pallas
+    kernel implements."""
+    B_, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    Q, n = chunk, S // chunk
+    mv = (lambda a: jnp.moveaxis(a.reshape((B_, n, Q) + a.shape[2:]), 1, 0).astype(jnp.float32))
+    xc, dtc, Bc, Cc = mv(x), mv(dt), mv(Bm), mv(Cm)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B_, H, P, N), jnp.float32)
+    else:
+        state = state.astype(jnp.float32)
+
+    def chunk_step(h0, inp):
+        xq, dtq, Bq, Cq = inp                       # (B,Q,H,*)
+        a = dtq * Af                                # (B,Q,H) log decay
+        cum = jnp.cumsum(a, axis=1)                 # inclusive
+        # inter: y_t += C_t · (e^{cum_t} h0)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", Cq * jnp.exp(cum)[..., None], h0)
+        # intra: L[t,s] = e^{cum_t − cum_s} (s ≤ t)
+        Ldiff = cum[:, :, None] - cum[:, None]      # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        # exponent masked BEFORE exp: see wkv6 note (NaN-safe backward)
+        Lmat = jnp.where(mask, jnp.exp(jnp.where(mask, Ldiff, 0.0)), 0.0)
+        G = jnp.einsum("bqhn,bshn->bqsh", Cq, Bq) * Lmat
+        y = y_inter + jnp.einsum("bqsh,bsh,bshp->bqhp", G, dtq, xq) \
+            + Df[None, None, :, None] * xq
+        # state: h = e^{cum_end} h0 + Σ_s e^{cum_end − cum_s} (dt_s x_s) ⊗ B_s
+        cum_end = cum[:, -1]                        # (B,H)
+        w = jnp.exp(cum_end[:, None] - cum) * dtq   # (B,Q,H)
+        h = jnp.exp(cum_end)[..., None, None] * h0 \
+            + jnp.einsum("bqh,bqhp,bqhn->bhpn", w, xq, Bq)
+        return h, y
+
+    state, ys = lax.scan(chunk_step, state, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, S, H, P)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm (oracle for kernels/rmsnorm.py)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,99 @@
+"""Mamba2 SSD Pallas TPU kernel — chunked scalar-identity state space.
+
+Grid: (B·H, S/Q); chunk axis sequential with the (P,N) state in VMEM
+scratch; B·H parallel.  Matmul-form block decomposition (Mamba-2 paper):
+intra-chunk C·Bᵀ ⊙ decay-mask GEMM + inter-chunk state term — identical
+math to ``ref.ssd_chunked_ref``.
+
+VMEM per grid step (Q=64, P=64, N=64 fp32): x/B/C blocks 3·Q·max(P,N)
+= 48 KB, state P·N = 16 KB, L-mask Q·Q = 16 KB — minimal; the two GEMMs
+(Q×N·Nᵀ and Q×Q @ Q×P) land on the MXU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, s0_ref,
+                y_ref, sf_ref, state):
+    qi = pl.program_id(1)
+
+    @pl.when(qi == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q,P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    A = a_ref[0]                                     # scalar (per head)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # (Q,N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # (Q,N)
+    D = d_ref[0]
+    Q = x.shape[0]
+
+    a = dt * A                                       # (Q,) log decay ≤ 0
+    cum = jnp.cumsum(a)                              # inclusive
+    h0 = state[...]                                  # (P,N)
+
+    # inter-chunk: y_t += (C_t e^{cum_t}) · h0ᵀ
+    y = (Cm * jnp.exp(cum)[:, None]) @ h0.T          # (Q,P)
+
+    # intra-chunk: G[t,s] = (C_t·B_s) e^{cum_t − cum_s} dt_s   (s ≤ t)
+    Ldiff = cum[:, None] - cum[None, :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    L = jnp.where(mask, jnp.exp(Ldiff), 0.0)
+    G = (Cm @ Bm.T) * L * dt[None, :]
+    y = y + G @ x + D * x
+
+    # state: h = e^{cum_end} h0 + Σ_s e^{cum_end − cum_s} dt_s x_s ⊗ B_s
+    cum_end = cum[-1]
+    wgt = jnp.exp(cum_end - cum) * dt                # (Q,)
+    state[...] = jnp.exp(cum_end) * h0 + (x * wgt[:, None]).T @ Bm
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    sf_ref[0, 0] = state[...].astype(sf_ref.dtype)
+
+
+def ssd_pallas(x, dt, A, Bm, Cm, D, state=None, *, chunk: int = 64,
+               interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,H,P); dt (B,S,H); A,D (H,); Bm,Cm (B,S,H,N) head-expanded."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    nq = S // chunk
+    if state is None:
+        state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    x_spec = pl.BlockSpec((1, chunk, 1, P), lambda bh, qi: (bh // H, qi, bh % H, 0))
+    bc_spec = pl.BlockSpec((1, chunk, 1, N), lambda bh, qi: (bh // H, qi, bh % H, 0))
+    dt_spec = pl.BlockSpec((1, chunk, 1), lambda bh, qi: (bh // H, qi, bh % H))
+    h_spec = pl.BlockSpec((1,), lambda bh, qi: (bh % H,))
+    st_spec = pl.BlockSpec((1, 1, P, N), lambda bh, qi: (bh // H, bh % H, 0, 0))
+
+    y, sf = pl.pallas_call(
+        _ssd_kernel,
+        grid=(B * H, nq),
+        in_specs=[x_spec, dt_spec, h_spec, bc_spec, bc_spec, h_spec, st_spec],
+        out_specs=[x_spec, st_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+                   jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)],
+        scratch_shapes=[_vmem((P, N), jnp.float32)],
+        interpret=interpret,
+        compiler_params=None if interpret else _tpu_params(),
+    )(x, dt, A.astype(jnp.float32), Bm, Cm, D.astype(jnp.float32), state)
+    return y, sf
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _tpu_params():
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary"))

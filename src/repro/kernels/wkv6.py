@@ -1,0 +1,105 @@
+"""RWKV6 WKV Pallas TPU kernel — chunked matmul-form linear recurrence.
+
+Grid: (B·H, S/Q).  The chunk axis is sequential ("arbitrary") so the (K,V)
+state lives in a VMEM scratch carried across chunk iterations; the B·H axis
+is parallel.  Within a chunk the recurrence is evaluated in matmul form
+(MXU-friendly): intra-chunk attention-like matrix A[t,s] plus an
+inter-chunk state term — identical math to ``ref.wkv6_chunked_ref``, whose
+tests gate this kernel (interpret mode on CPU).
+
+VMEM budget per grid step (Q=32, K=V=64, fp32):
+  blocks r/k/v/w 4·Q·K = 32 KB, state K·V = 16 KB, decay tensor Q·Q·K
+  = 256 KB, out Q·V = 8 KB — comfortably under the ~16 MB/core budget,
+  with dims aligned to the 8×128 / MXU 128 tiling where it matters (K=V=64
+  uses half-tiles; acceptable for head_dim-64 models).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 y_ref, sf_ref, state, *, nq: int):
+    qi = pl.program_id(1)
+
+    @pl.when(qi == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)      # (Q,K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)      # log decay ≤ 0
+    u = u_ref[0].astype(jnp.float32)               # (K,)
+    Q = r.shape[0]
+
+    cw = jnp.cumsum(w, axis=0) - w                 # exclusive cumsum (Q,K)
+    cw_end = jnp.sum(w, axis=0)                    # (K,)
+    S0 = state[...]                                # (K,V)
+
+    # inter-chunk: y_t += (r_t ⊙ e^{cw_t}) · S0
+    y = (r * jnp.exp(cw)) @ S0                     # (Q,V)
+
+    # intra-chunk: A[t,s] = Σ_K r_t k_s e^{cw_t − cw_s − w_s}  (s<t), diag u
+    dmat = cw[:, None, :] - cw[None, :, :] - w[None, :, :]     # (Q,Q,K)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+            > jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))
+    P = jnp.where(mask[:, :, None], jnp.exp(dmat), 0.0)
+    A = jnp.einsum("qk,sk,qsk->qs", r, k, P,
+                   preferred_element_type=jnp.float32)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)                # (Q,)
+    y = y + A @ v + diag[:, None] * v
+
+    # state update: S = diag(e^{cw_end}) S0 + Σ_s e^{cw_end − cw_s − w_s} k_s v_sᵀ
+    carry_k = k * jnp.exp(cw_end[None, :] - cw - w)            # (Q,K)
+    state[...] = jnp.exp(cw_end)[:, None] * S0 + carry_k.T @ v
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    sf_ref[0, 0] = state[...].astype(sf_ref.dtype)
+
+
+def wkv6_pallas(r, k, v, w_log, u, state=None, *, chunk: int = 32,
+                interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w_log: (B,S,H,K); u: (H,K); state: (B,H,K,V) fp32 or None."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    assert S % chunk == 0
+    nq = S // chunk
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+
+    seq_spec = pl.BlockSpec((1, chunk, 1, K),
+                            lambda bh, qi: (bh // H, qi, bh % H, 0))
+    u_spec = pl.BlockSpec((1, K), lambda bh, qi: (bh % H, 0))
+    st_spec = pl.BlockSpec((1, 1, K, V), lambda bh, qi: (bh // H, bh % H, 0, 0))
+
+    y, sf = pl.pallas_call(
+        functools.partial(_wkv6_kernel, nq=nq),
+        grid=(B * H, nq),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, u_spec, st_spec],
+        out_specs=[pl.BlockSpec((1, chunk, 1, V),
+                                lambda bh, qi: (bh // H, qi, bh % H, 0)),
+                   st_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, S, H, V), v.dtype),
+                   jax.ShapeDtypeStruct((B, H, K, V), jnp.float32)],
+        scratch_shapes=[_vmem((K, V), jnp.float32)],
+        interpret=interpret,
+        compiler_params=None if interpret else _tpu_params(),
+    )(r, k, v, w_log, u, state)
+    return y, sf
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _tpu_params():
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "arbitrary"))

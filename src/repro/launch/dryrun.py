@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production meshes, prove the memory fits, and dump the roofline
+inputs (FLOPs / bytes / collective bytes by op kind).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Outputs one JSON per combo under experiments/dryrun/.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.specs import decode_input_specs, input_specs, param_specs_shapes
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import constraints as CT
+from repro.parallel import sharding as SH
+from repro.serving.engine import make_serve_step
+from repro.train.trainer import TrainConfig, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    dt_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f64": 8,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+    # lines like: %ag = bf16[2,512]{1,0} all-gather(...)
+    pat = re.compile(
+        r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\]"        # result dtype[shape]
+        r"[^=]*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b")
+    for mt in pat.finditer(hlo_text):
+        dt, shp, kind = mt.groups()
+        if dt not in dt_bytes:
+            continue
+        n = 1
+        for d in shp.split(","):
+            if d.strip().isdigit():
+                n *= int(d)
+        out[kind] += n * dt_bytes[dt]
+        out["count"] += 1
+    return out
+
+
+def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 dtype: str = "bfloat16", microbatches: int = 1,
+                 sharding: str = "2d", remat: bool = True, swa: int = 0,
+                 cache_dtype: str = "", extra_tags: str = ""):
+    """Lower+compile; returns the result record (raises on failure).
+
+    sharding:
+      * "2d"   — baseline FSDP(data) × TP(model) (paper-faithful default)
+      * "fsdp" — pure FSDP: the model axis joins the data axes; no tensor
+        parallelism, so per-layer activation all-reduces vanish (the §Perf
+        hillclimb move for collective-bound small models)
+    """
+    cfg = get_config(arch).replace(dtype=dtype)
+    if swa:   # beyond-assignment: sliding-window variant of a dense arch,
+              # making it long_500k-eligible (ring-buffer cache = window)
+        cfg = cfg.replace(sliding_window=swa)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "why": why}
+
+    if sharding.startswith("hybrid"):
+        # §Perf variant: same 256 chips, reduced TP degree t — the extra
+        # model-axis factor becomes another data axis (batch/FSDP), trading
+        # activation all-reduce volume against parameter-gather volume.
+        t = int(sharding[len("hybrid"):])
+        assert not multi_pod, "perf variants are single-pod"
+        mesh = jax.make_mesh((16, 16 // t, t), ("data", "extra", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        dp_axes, tp_axis = ("data", "extra"), "model"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        dp_axes, tp_axis = mesh_axes(mesh)
+        if sharding == "fsdp":
+            dp_axes = dp_axes + (tp_axis,)   # model axis becomes extra data axis
+            tp_axis = None
+    tp = mesh.devices.shape[-1] if tp_axis else 1
+    ep_pad = (16 if cfg.is_moe else 1)   # expert padding independent of plan
+    jax.sharding.set_mesh(mesh)          # ambient mesh for bare-P constraints
+    # sequence parallelism when even one sample's residuals exceed budget
+    seq_shard = (shape.kind == "train"
+                 and 3 * cfg.num_layers * shape.seq_len * cfg.d_model * 2 > 3.5e9)
+    ctx = CT.use_axes(dp_axes, tp_axis, seq_shard=seq_shard, tp_size=tp)
+    ctx.__enter__()
+
+    t0 = time.time()
+    p_shapes = param_specs_shapes(cfg, ep_pad=ep_pad)
+    p_spec = SH.param_specs(p_shapes, mesh, fsdp_axes=dp_axes, tp_axis=tp_axis)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec)
+
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod, "dtype": dtype,
+        "params": int(sum(np.prod(l.shape) for l in jax.tree.leaves(p_shapes))),
+        "tags": extra_tags,
+    }
+
+    if shape.kind in ("train", "prefill"):
+        batch_shapes = input_specs(cfg, shape)
+        b_spec = SH.batch_specs(cfg, batch_shapes, mesh, dp_axes=dp_axes)
+        b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), b_spec)
+        if shape.kind == "train":
+            # auto gradient-accumulation: bound live per-microbatch residuals
+            # (≈ 3·L·S·D bytes/sample with bf16 + remat bookkeeping) to ~3.5GB
+            dp = int(np.prod([mesh.devices.shape[i]
+                              for i, n in enumerate(mesh.axis_names)
+                              if n in dp_axes]))
+            b_loc = max(1, shape.global_batch // dp)
+            per_sample = 3 * cfg.num_layers * shape.seq_len * cfg.d_model * 2
+            if cfg.is_moe:
+                per_sample *= 4   # dispatch buffers / router tensors scale with T
+            b_mb = max(1, int(3.5e9 // per_sample))
+            ga = 1
+            while b_loc // ga > b_mb and ga < b_loc:
+                ga *= 2
+            record["grad_accum"] = ga
+            tcfg = TrainConfig(remat=remat, microbatches=microbatches,
+                               grad_accum=ga)
+            step = make_train_step(cfg, tcfg)
+            o_shapes = jax.eval_shape(adamw.init_state, p_shapes)
+            o_spec = {"mu": p_spec, "nu": p_spec, "count": P()}
+            o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_spec)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard, NamedSharding(mesh, P())),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),   # params/opt update in place
+            )
+            args = (p_shapes, o_shapes, batch_shapes,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+        else:   # prefill: forward logits only (inference)
+            def prefill_step(params, batch):
+                x, _, _ = M.forward_hidden(cfg, params, batch, remat=False)
+                return M._unembed(cfg, params, x[:, -1:])
+            jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                             out_shardings=None)
+            args = (p_shapes, batch_shapes)
+        lowered = jitted.lower(*args)
+    else:   # decode
+        dspec = decode_input_specs(cfg, shape, cache_dtype or None)
+        c_spec = SH.cache_specs(cfg, dspec["caches"], mesh,
+                                dp_axes=dp_axes, tp_axis=tp_axis)
+        c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_spec)
+        tok_spec = SH.batch_specs(cfg, {"tokens": dspec["tokens"]}, mesh,
+                                  dp_axes=dp_axes)["tokens"]
+        tok_shard = NamedSharding(mesh, tok_spec)
+        step = make_serve_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_shard, tok_shard, c_shard),
+                         out_shardings=(tok_shard, c_shard),
+                         donate_argnums=(2,))    # KV/state caches in place
+        lowered = jitted.lower(p_shapes, dspec["tokens"], dspec["caches"])
+
+    ctx.__exit__(None, None, None)
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                      + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+    }
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    record["cost"] = {k: float(v) for k, v in dict(cost or {}).items()
+                      if isinstance(v, (int, float)) and k in
+                      ("flops", "bytes accessed", "optimal_seconds",
+                       "utilization operand 0 {}", "transcendentals")}
+    record["flops"] = float((cost or {}).get("flops", 0.0))
+    record["bytes_accessed"] = float((cost or {}).get("bytes accessed", 0.0))
+
+    hlo = compiled.as_text()
+    record["collectives"] = parse_collective_bytes(hlo)
+    record["status"] = "ok"
+    return record
+
+
+def run_one(arch, shape_name, multi_pod, out_dir=OUT_DIR, **kw):
+    tag = "pod2" if multi_pod else "pod1"
+    try:
+        rec = build_dryrun(arch, shape_name, multi_pod=multi_pod, **kw)
+    except Exception as e:  # noqa
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = kw.get("extra_tags", "")
+    suffix = f"_{suffix}" if suffix else ""
+    path = os.path.join(out_dir, f"{arch}_{shape_name}_{tag}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = rec["status"]
+    extra = "" if status != "ok" else (
+        f" peak={rec['memory']['peak_bytes']/2**30:.2f}GiB/dev "
+        f"flops={rec['flops']:.3g} coll={rec['collectives']['count']}")
+    print(f"[{status:7s}] {arch} × {shape_name} × {tag}{suffix}{extra}", flush=True)
+    if status == "error":
+        print(rec["error"], flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--assigned-only", action="store_true", default=True)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sharding", default="2d",
+                    choices=["2d", "fsdp", "hybrid2", "hybrid4", "hybrid8"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--swa", type=int, default=0,
+                    help="override: sliding-window variant (enables long_500k)")
+    ap.add_argument("--cache-dtype", default="",
+                    help="KV/state cache dtype override (e.g. float8_e4m3fn)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_one(a, s, mp, microbatches=args.microbatches,
+                              sharding=args.sharding, remat=not args.no_remat,
+                              swa=args.swa, cache_dtype=args.cache_dtype,
+                              extra_tags=args.tag)
+                failures += rec["status"] == "error"
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def input_specs(cfg, shape) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "targets": sds((B, S), jnp.int32),
+        "mask": sds((B, S), jnp.float32),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patches"] = sds((B, M.N_PATCHES, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_input_specs(cfg, shape, cache_dtype=None) -> Dict[str, Any]:
+    """(tokens, caches) ShapeDtypeStructs for a serve step with a
+    ``seq_len``-deep cache.  ``cache_dtype`` overrides the KV/state cache
+    precision (e.g. float8_e4m3fn — §Perf memory-bound decode iteration)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    caches = jax.eval_shape(
+        lambda: M.init_caches(cfg, B, S, dtype=cache_dtype or cfg.dtype))
+    return {"tokens": sds((B, 1), jnp.int32), "caches": caches}
+
+
+def param_specs_shapes(cfg, *, ep_pad: int = 1):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return jax.eval_shape(
+        lambda r: M.init_params(cfg, r, ep_pad=ep_pad),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))

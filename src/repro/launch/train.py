@@ -1,0 +1,104 @@
+"""Training launcher.
+
+Single-host smoke scale by default; ``--mesh`` activates the pjit/GSPMD
+path with the production sharding rules (works on any device count — on
+real TPU pods the same flags apply, device count comes from the runtime).
+
+    PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+        --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import constraints as CT
+from repro.parallel import sharding as SH
+from repro.train import checkpoint
+from repro.train.trainer import TrainConfig, make_train_step, train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None,
+                    help="JSON run config (CLI flags override file values)")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (2 layers, d_model<=256)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x4 -> (data=2, model=4) pjit mesh")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    if args.config:
+        from repro.launch.config import load_run_config, merge_cli, resolve_model
+        run = merge_cli(load_run_config(args.config), args, defaults=dict(
+            steps=100, seq=256, batch=8, lr=3e-4, grad_accum=1,
+            mesh=None, ckpt=None, log_every=10))
+        if args.arch:
+            run["arch"] = args.arch
+        for k, v in run.items():
+            if hasattr(args, k) and k != "overrides":
+                setattr(args, k, v)
+        cfg = resolve_model(run)
+    else:
+        assert args.arch, "--arch or --config required"
+        cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    data = iter(SyntheticCorpus(dc))
+    tcfg = TrainConfig(opt=adamw.AdamWConfig(lr=args.lr),
+                       warmup=max(5, args.steps // 10),
+                       total_steps=args.steps, grad_accum=args.grad_accum)
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[:len(shape)]
+        mesh = jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        jax.sharding.set_mesh(mesh)
+        rng = jax.random.PRNGKey(0)
+        with CT.use_axes(("data",), "model"):
+            params = M.init_params(cfg, rng)
+            p_spec = SH.param_specs(params, mesh)
+            from jax.sharding import NamedSharding
+            params = jax.device_put(
+                params, jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec))
+            opt_state = adamw.init_state(params)
+            step_fn = jax.jit(make_train_step(cfg, tcfg))
+            for step in range(args.steps):
+                batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+                params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                     jnp.asarray(step))
+                if step % args.log_every == 0:
+                    print(f"step {step:4d} loss {float(metrics['loss']):.4f}")
+        history = None
+    else:
+        params, history = train_loop(cfg, tcfg, data, steps=args.steps,
+                                     log_every=args.log_every)
+
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, step=args.steps)
+        print(f"checkpoint written to {args.ckpt}")
+    if history:
+        print(f"final loss {history['loss'][-1]:.4f} "
+              f"(first {history['loss'][0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

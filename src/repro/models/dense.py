@@ -1,0 +1,144 @@
+"""Generic decoder trunk: dense GQA / SWA / MLA attention + SwiGLU/GELU or
+MoE feed-forward.  Covers the dense, moe and vlm families (and is reused as
+the transformer block by whisper and zamba2).
+
+Layers are *stacked* (leading L axis) and executed with ``lax.scan`` so the
+compiled graph contains one layer body regardless of depth — essential to
+keep the 512-device GSPMD dry-run compiles tractable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.parallel import constraints as CT
+
+Params = Dict[str, Any]
+
+
+def init_layer(key, cfg, *, use_moe: bool, ep_pad: int = 1, dtype=jnp.float32) -> Params:
+    k_attn, k_mlp = jax.random.split(key)
+    p: Params = {"ln1": L.init_norm(cfg.d_model, cfg.norm_kind, dtype)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = L.init_mla(k_attn, cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(k_attn, cfg, dtype=dtype)
+    if not cfg.parallel_block:
+        p["ln2"] = L.init_norm(cfg.d_model, cfg.norm_kind, dtype)
+    if use_moe:
+        p["moe"] = L.init_moe(k_mlp, cfg, ep_pad=ep_pad, dtype=dtype)
+    else:
+        p["mlp"] = L.init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    return p
+
+
+def layer_fwd(p: Params, cfg, x: jnp.ndarray, positions, cache: Optional[Params],
+              *, use_moe: bool) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    x = CT.btd(x)
+    h = L.norm(p["ln1"], x, cfg.norm_kind)
+    if cfg.attn_kind == "mla":
+        attn_out, new_cache = L.mla_attention(p["attn"], cfg, h, positions, cache=cache)
+    else:
+        attn_out, new_cache = L.attention(p["attn"], cfg, h, positions, cache=cache)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:           # phi-2 style: mlp reads the same norm
+        x = x + attn_out + L.mlp(p["mlp"], h, cfg.mlp_kind)
+    else:
+        x = x + attn_out
+        h2 = L.norm(p["ln2"], x, cfg.norm_kind)
+        if use_moe:
+            ff, aux = L.moe_block(p["moe"], cfg, h2)
+        else:
+            ff = L.mlp(p["mlp"], h2, cfg.mlp_kind)
+        x = x + ff
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacked trunk
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_one, keys):
+    return jax.vmap(init_one)(keys)
+
+
+def init_trunk(key, cfg, *, ep_pad: int = 1, dtype=jnp.float32) -> Params:
+    """Two stacked segments: leading dense layers (MoE archs may start dense),
+    then the homogeneous tail."""
+    n_dense_head = cfg.first_dense_layers if cfg.is_moe else cfg.num_layers
+    n_tail = cfg.num_layers - n_dense_head
+    keys = jax.random.split(key, cfg.num_layers)
+    p: Params = {}
+    if n_dense_head:
+        p["dense_layers"] = _stack_init(
+            partial(init_layer, cfg=cfg, use_moe=False, dtype=dtype), keys[:n_dense_head])
+    if n_tail:
+        p["moe_layers"] = _stack_init(
+            partial(init_layer, cfg=cfg, use_moe=True, ep_pad=ep_pad, dtype=dtype),
+            keys[n_dense_head:])
+    return p
+
+
+def _run_segment(stacked: Params, cfg, x, positions, caches, *, use_moe: bool,
+                 remat: bool) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    body = partial(layer_fwd, cfg=cfg, positions=positions, use_moe=use_moe)
+
+    if caches is None:
+        def scan_fn(carry, lp):
+            x, aux = carry
+            fn = (lambda q, v: layer_fwd(q, cfg, v, positions, None, use_moe=use_moe))
+            if remat:
+                fn = jax.checkpoint(fn)
+            x, _, a = fn(lp, x)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), stacked)
+        return x, None, aux
+
+    def scan_fn(carry, xs):
+        x, aux = carry
+        lp, lc = xs
+        x, nc, a = layer_fwd(lp, cfg, x, positions, lc, use_moe=use_moe)
+        return (x, aux + a), nc
+    (x, aux), new_caches = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                                        (stacked, caches))
+    return x, new_caches, aux
+
+
+def trunk_fwd(p: Params, cfg, x, positions, caches=None, *, remat: bool = False):
+    """caches: None | {"dense_layers": stacked_cache, "moe_layers": stacked_cache}."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+    for seg, use_moe in (("dense_layers", False), ("moe_layers", True)):
+        if seg not in p:
+            continue
+        seg_cache = caches[seg] if caches is not None else None
+        x, nc, aux = _run_segment(p[seg], cfg, x, positions, seg_cache,
+                                  use_moe=use_moe, remat=remat)
+        if nc is not None:
+            new_caches[seg] = nc
+        aux_total = aux_total + aux
+    return x, (new_caches or None), aux_total
+
+
+def init_trunk_caches(cfg, batch: int, seq_len: int, dtype=jnp.float32) -> Params:
+    """Stacked per-segment decode caches (leading L axis, matching scan xs)."""
+    def one(cfg):
+        if cfg.attn_kind == "mla":
+            return L.init_mla_cache(cfg, batch, seq_len, dtype)
+        return L.init_kv_cache(cfg, batch, seq_len, dtype)
+
+    n_dense_head = cfg.first_dense_layers if cfg.is_moe else cfg.num_layers
+    n_tail = cfg.num_layers - n_dense_head
+    caches: Params = {}
+    if n_dense_head:
+        caches["dense_layers"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_dense_head,) + a.shape).copy(), one(cfg))
+    if n_tail:
+        caches["moe_layers"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_tail,) + a.shape).copy(), one(cfg))
+    return caches

@@ -1,0 +1,103 @@
+"""Mamba2 (SSD) block — scalar-identity state space with chunked scan.
+
+Used by the zamba2 hybrid trunk.  The inner recurrence runs through
+``kernels.ops.ssd`` (chunked matmul form / Pallas kernel / naive ref).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops as K
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def head_p(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_heads
+
+
+def conv_channels(cfg) -> int:
+    return d_inner(cfg) + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_block(key, cfg, dtype=jnp.float32) -> Params:
+    D = cfg.d_model
+    din = d_inner(cfg)
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    return {
+        # separate projections (z / conv-input / dt) so each has a clean
+        # TP sharding axis (a packed in_proj would shard across segment
+        # boundaries and force GSPMD reshards at every split)
+        "z_proj": L.init_linear(ks[0], D, din, dtype=dtype),
+        "xbc_proj": L.init_linear(ks[3], D, din + 2 * G * N, dtype=dtype),
+        "dt_proj": L.init_linear(ks[4], D, H, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_channels(cfg)), jnp.float32)
+                   / math.sqrt(cfg.conv_kernel)).astype(dtype),
+        "conv_b": jnp.zeros((conv_channels(cfg),), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": L.init_norm(din, "rmsnorm", dtype),
+        "out_proj": L.init_linear(ks[2], din, D, dtype=dtype),
+    }
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d.  xBC (B,S,C), w (K,C).  conv_state (B,K-1,C)
+    carries the previous K-1 inputs (decode)."""
+    Kk = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((xBC.shape[0], Kk - 1, xBC.shape[2]), xBC.dtype)
+    xp = jnp.concatenate([conv_state, xBC], axis=1)             # (B,S+K-1,C)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(Kk)) + b
+    new_state = xp[:, -(Kk - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def block_fwd(p: Params, cfg, x: jnp.ndarray, cache: Optional[Params],
+              backend: Optional[str] = None):
+    """cache: {"conv": (B,K-1,C), "state": (B,H,P,N)} or None (train)."""
+    B, S, _ = x.shape
+    din = d_inner(cfg)
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    P = head_p(cfg)
+
+    z = L.linear(p["z_proj"], x)
+    xBC = L.linear(p["xbc_proj"], x)
+    dt = L.linear(p["dt_proj"], x)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                   cache["conv"] if cache else None)
+    xs, Bm, Cm = jnp.split(xBC, [din, din + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    rep = H // G
+    Bm = jnp.repeat(Bm.reshape(B, S, G, N), rep, axis=2)
+    Cm = jnp.repeat(Cm.reshape(B, S, G, N), rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, new_state = K.ssd(xs, dt, A, Bm, Cm, p["D"],
+                         cache["state"] if cache else None, backend=backend)
+    y = y.reshape(B, S, din)
+    y = L.norm(p["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = L.linear(p["out_proj"], y)
+    new_cache = {"conv": conv_state, "state": new_state} if cache is not None else None
+    return out, new_cache
+
+
+def init_cache(cfg, batch: int, dtype=jnp.float32) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_channels(cfg)), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, head_p(cfg), cfg.ssm_state), jnp.float32),
+    }

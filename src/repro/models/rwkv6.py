@@ -1,0 +1,162 @@
+"""RWKV6 "Finch" — attention-free, data-dependent decay [arXiv:2404.05892].
+
+Block = time-mix (WKV6 linear recurrence over a per-head (K,V) state, with
+data-dependent per-channel decay produced by a LoRA on the token-shifted
+input) + channel-mix (squared-ReLU FFN with receptance gate).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops as K
+from repro.models import layers as L
+from repro.parallel import constraints as CT
+
+Params = Dict[str, Any]
+
+MIX_LORA = 32     # rank of the 5-way token-mix LoRA
+DECAY_LORA = 64   # rank of the decay LoRA
+
+
+def init_layer(key, cfg, dtype=jnp.float32) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    H, Kd = cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(D)
+
+    def mat(k_, m, n, sc=None):
+        return (jax.random.normal(k_, (m, n), jnp.float32) * (sc or 1.0 / math.sqrt(m))).astype(dtype)
+
+    return {
+        "ln1": L.init_norm(D, "layernorm", dtype),
+        "ln2": L.init_norm(D, "layernorm", dtype),
+        "tm": {
+            "maa_x": jnp.zeros((D,), dtype),
+            "maa": jnp.zeros((5, D), dtype),                       # w,k,v,r,g bases
+            "maa_w1": mat(ks[0], D, 5 * MIX_LORA, 0.01),
+            "maa_w2": (jax.random.normal(ks[1], (5, MIX_LORA, D), jnp.float32) * 0.01).astype(dtype),
+            "decay": jnp.full((D,), -6.0, dtype),                  # w = exp(-exp(decay+lora))
+            "decay_w1": mat(ks[2], D, DECAY_LORA, 0.01),
+            "decay_w2": mat(ks[3], DECAY_LORA, D, 0.01),
+            "bonus": (jax.random.normal(ks[4], (H, Kd), jnp.float32) * 0.1).astype(dtype),  # u
+            "Wr": mat(ks[5], D, D, s), "Wk": mat(ks[6], D, D, s),
+            "Wv": mat(ks[7], D, D, s), "Wg": mat(ks[8], D, D, s),
+            "Wo": mat(ks[9], D, D, s),
+            "ln_x": L.init_norm(D, "layernorm", dtype),            # per-head groupnorm
+        },
+        "cm": {
+            "maa_k": jnp.zeros((D,), dtype),
+            "maa_r": jnp.zeros((D,), dtype),
+            "Wk": mat(ks[10], D, F),
+            "Wv": mat(ks[11], F, D),
+            "Wr": mat(jax.random.fold_in(key, 99), D, D),
+        },
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x (B,S,D) -> previous token's activations; ``last`` (B,1,D) is the
+    carry from the previous segment (zeros at sequence start)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _group_norm_heads(p, x, H):
+    """LayerNorm per head (RWKV's GroupNorm(heads))."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, H, D // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * lax.rsqrt(var + 64e-5)
+    xh = xh.reshape(B, S, D) * p["scale"] + p["bias"]
+    return xh
+
+
+def time_mix(p: Params, cfg, x: jnp.ndarray, state, shift_last,
+             backend: Optional[str] = None):
+    B, S, D = x.shape
+    H, Kd = cfg.num_heads, cfg.head_dim
+    xprev = _token_shift(x, shift_last)
+    dx = xprev - x
+    xxx = x + dx * p["maa_x"]
+    m = jnp.tanh(xxx @ p["maa_w1"]).reshape(B, S, 5, MIX_LORA)
+    m = jnp.einsum("bsfr,frd->bsfd", m, p["maa_w2"])               # (B,S,5,D)
+    mu = p["maa"][None, None] + m
+    xw, xk, xv, xr, xg = (x + dx * mu[:, :, i] for i in range(5))
+
+    r = (xr @ p["Wr"]).reshape(B, S, H, Kd)
+    k = (xk @ p["Wk"]).reshape(B, S, H, Kd)
+    v = (xv @ p["Wv"]).reshape(B, S, H, Kd)
+    g = jax.nn.silu(xg @ p["Wg"])
+    w_log = -jnp.exp(p["decay"].astype(jnp.float32)
+                     + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"])
+    w_log = w_log.reshape(B, S, H, Kd)
+
+    y, new_state = K.wkv6(r, k, v, w_log, p["bonus"], state, backend=backend)
+    y = _group_norm_heads(p["ln_x"], y.reshape(B, S, D), H).astype(x.dtype)
+    out = (y * g) @ p["Wo"]
+    return out, new_state, x[:, -1:]
+
+
+def channel_mix(p: Params, x: jnp.ndarray, shift_last):
+    xprev = _token_shift(x, shift_last)
+    dx = xprev - x
+    xk = x + dx * p["maa_k"]
+    xr = x + dx * p["maa_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["Wk"]))
+    return jax.nn.sigmoid(xr @ p["Wr"]) * (h @ p["Wv"]), x[:, -1:]
+
+
+def layer_fwd(p: Params, cfg, x: jnp.ndarray, cache: Optional[Params],
+              backend: Optional[str] = None):
+    x = CT.btd(x)
+    st = cache or {}
+    tm_out, wkv, tm_last = time_mix(p["tm"], cfg, L.norm(p["ln1"], x, "layernorm"),
+                                    st.get("wkv"), st.get("shift_tm"), backend)
+    x = x + tm_out
+    cm_out, cm_last = channel_mix(p["cm"], L.norm(p["ln2"], x, "layernorm"),
+                                  st.get("shift_cm"))
+    x = x + cm_out
+    new_cache = {"wkv": wkv, "shift_tm": tm_last, "shift_cm": cm_last} \
+        if cache is not None else None
+    return x, new_cache
+
+
+def init_trunk(key, cfg, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, cfg.num_layers)
+    return {"layers": jax.vmap(partial(init_layer, cfg=cfg, dtype=dtype))(keys)}
+
+
+def trunk_fwd(p: Params, cfg, x, positions=None, caches=None, *,
+              remat: bool = False, backend: Optional[str] = None):
+    def scan_fn(x, xs):
+        if caches is None:
+            fn = lambda q, v: layer_fwd(q, cfg, v, None, backend)
+            if remat:
+                fn = jax.checkpoint(fn)
+            x, _ = fn(xs, x)
+            return x, None
+        lp, lc = xs
+        x, nc = layer_fwd(lp, cfg, x, lc, backend)
+        return x, nc
+
+    xs = p["layers"] if caches is None else (p["layers"], caches["layers"])
+    x, new_caches = lax.scan(scan_fn, x, xs)
+    return x, ({"layers": new_caches} if caches is not None else None), jnp.zeros((), jnp.float32)
+
+
+def init_trunk_caches(cfg, batch: int, seq_len: int, dtype=jnp.float32) -> Params:
+    one = {
+        "wkv": jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "shift_tm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "shift_cm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }
+    return {"layers": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), one)}

@@ -1,0 +1,111 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is a STUB per the assignment: the
+encoder consumes precomputed frame embeddings (B, encoder_seq, d_model).
+Encoder = bidirectional attention stack; decoder = causal self-attention +
+cross-attention to the encoder memory.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.parallel import constraints as CT
+
+Params = Dict[str, Any]
+
+
+def init_enc_layer(key, cfg, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "attn": L.init_attention(k1, cfg, dtype=dtype),
+        "ln2": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype),
+    }
+
+
+def init_dec_layer(key, cfg, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "self_attn": L.init_attention(k1, cfg, dtype=dtype),
+        "ln_x": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "cross_attn": L.init_attention(k2, cfg, dtype=dtype),
+        "ln2": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype),
+    }
+
+
+def init_trunk(key, cfg, dtype=jnp.float32) -> Params:
+    ke, kd, kp = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "enc_pos": (jax.random.normal(kp, (cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "enc_layers": jax.vmap(partial(init_enc_layer, cfg=cfg, dtype=dtype))(enc_keys),
+        "enc_ln": L.init_norm(cfg.d_model, "layernorm", dtype),
+        "dec_layers": jax.vmap(partial(init_dec_layer, cfg=cfg, dtype=dtype))(dec_keys),
+    }
+
+
+def encode(p: Params, cfg, frames: jnp.ndarray, *, remat: bool = True) -> jnp.ndarray:
+    """frames: (B, encoder_seq, d_model) stub embeddings -> memory."""
+    x = CT.btd(frames + p["enc_pos"][None, :frames.shape[1]])
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None], frames.shape[:2])
+
+    def body(lp, x):
+        x = CT.btd(x)
+        h = L.norm(lp["ln1"], x, "layernorm")
+        a, _ = L.attention(lp["attn"], cfg, h, pos, causal=False)
+        x = x + a
+        x = x + L.mlp(lp["mlp"], L.norm(lp["ln2"], x, "layernorm"), cfg.mlp_kind)
+        return x
+
+    def fn(x, lp):
+        f = jax.checkpoint(body) if remat else body
+        return f(lp, x), None
+
+    x, _ = lax.scan(fn, x, p["enc_layers"])
+    return L.norm(p["enc_ln"], x, "layernorm")
+
+
+def dec_layer_fwd(lp: Params, cfg, x, memory, positions, cache):
+    x = CT.btd(x)
+    h = L.norm(lp["ln1"], x, "layernorm")
+    a, new_cache = L.attention(lp["self_attn"], cfg, h, positions, cache=cache)
+    x = x + a
+    h = L.norm(lp["ln_x"], x, "layernorm")
+    a, _ = L.attention(lp["cross_attn"], cfg, h, positions, x_kv=memory)
+    x = x + a
+    x = x + L.mlp(lp["mlp"], L.norm(lp["ln2"], x, "layernorm"), cfg.mlp_kind)
+    return x, new_cache
+
+
+def decode_trunk(p: Params, cfg, x, memory, positions, caches=None, *,
+                 remat: bool = False):
+    def fn(x, xs):
+        if caches is None:
+            f = lambda q, v: dec_layer_fwd(q, cfg, v, memory, positions, None)
+            if remat:
+                f = jax.checkpoint(f)
+            x2, _ = f(xs, x)
+            return x2, None
+        lp, lc = xs
+        x2, nc = dec_layer_fwd(lp, cfg, x, memory, positions, lc)
+        return x2, nc
+
+    xs = p["dec_layers"] if caches is None else (p["dec_layers"], caches["dec"])
+    x, new = lax.scan(fn, x, xs)
+    return x, ({"dec": new} if caches is not None else None)
+
+
+def init_trunk_caches(cfg, batch: int, seq_len: int, dtype=jnp.float32) -> Params:
+    one = L.init_kv_cache(cfg, batch, seq_len, dtype)
+    return {"dec": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), one)}

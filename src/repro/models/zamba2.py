@@ -1,0 +1,149 @@
+"""Zamba2 hybrid trunk — Mamba2 layers with a *shared* transformer block
+(attention + MLP, one set of weights) applied every ``shared_attn_every``
+layers [arXiv:2411.15242].
+
+Faithful structure: the shared block consumes concat(hidden, original
+embedding) (2·d_model) through a *per-application* input projection
+(Zamba2's per-invocation LoRA adapters, here full-rank for simplicity —
+documented in DESIGN.md), runs the shared attention+MLP at d_model, and is
+added back to the residual stream.
+
+Scan layout: the trunk is reshaped into ``n_groups`` groups of
+``every`` mamba layers + one shared-block application, plus a tail of
+remaining mamba layers — so the compiled graph is two nested scans.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.parallel import constraints as CT
+
+Params = Dict[str, Any]
+
+
+def _split(cfg) -> Tuple[int, int, int]:
+    every = cfg.shared_attn_every
+    n_groups = cfg.num_layers // every
+    tail = cfg.num_layers - n_groups * every
+    return every, n_groups, tail
+
+
+def init_mamba_layer(key, cfg, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln": L.init_norm(cfg.d_model, "rmsnorm", dtype),
+            "mamba": mamba2.init_block(k2, cfg, dtype)}
+
+
+def mamba_layer_fwd(p, cfg, x, cache, backend=None):
+    x = CT.btd(x)
+    h, nc = mamba2.block_fwd(p["mamba"], cfg, L.norm(p["ln"], x, "rmsnorm"),
+                             cache, backend)
+    return x + h, nc
+
+
+def init_trunk(key, cfg, dtype=jnp.float32) -> Params:
+    every, n_groups, tail = _split(cfg)
+    D = cfg.d_model
+    keys = jax.random.split(key, cfg.num_layers + n_groups + 3)
+    lk = keys[:cfg.num_layers]
+    init_m = partial(init_mamba_layer, cfg=cfg, dtype=dtype)
+    p: Params = {}
+    if n_groups:
+        grouped = jax.vmap(jax.vmap(init_m))(
+            lk[:n_groups * every].reshape(n_groups, every, 2))
+        p["groups"] = grouped
+        # per-application input projections (2D -> D)
+        p["app_in"] = jax.vmap(lambda k_: L.init_linear(k_, 2 * D, D, dtype=dtype))(
+            keys[cfg.num_layers:cfg.num_layers + n_groups])
+        # shared transformer block (single weight set)
+        p["shared"] = {
+            "ln1": L.init_norm(D, "rmsnorm", dtype),
+            "attn": L.init_attention(keys[-3], cfg, dtype=dtype),
+            "ln2": L.init_norm(D, "rmsnorm", dtype),
+            "mlp": L.init_mlp(keys[-2], D, cfg.d_ff, "swiglu", dtype),
+        }
+    if tail:
+        p["tail"] = jax.vmap(init_m)(lk[n_groups * every:])
+    return p
+
+
+def _shared_block_fwd(shared: Params, app_in: Params, cfg, x, x0, positions, cache):
+    x = CT.btd(x)
+    h = L.linear(app_in, jnp.concatenate([x, x0], axis=-1))
+    a = L.norm(shared["ln1"], h, "rmsnorm")
+    attn_out, new_cache = L.attention(shared["attn"], cfg, a, positions, cache=cache)
+    h = h + attn_out
+    h = h + L.mlp(shared["mlp"], L.norm(shared["ln2"], h, "rmsnorm"), "swiglu")
+    return x + h, new_cache
+
+
+def trunk_fwd(p: Params, cfg, x, positions, caches=None, *,
+              remat: bool = False, backend: Optional[str] = None):
+    """caches: {"groups": stacked (G, every, ...), "attn": stacked (G, ...),
+    "tail": stacked (tail, ...)} or None."""
+    every, n_groups, tail = _split(cfg)
+    x0 = x  # original embeddings, consumed by every shared-block application
+    new_caches: Dict[str, Any] = {}
+
+    def mamba_scan(x, stacked, stacked_cache):
+        def fn(x, xs):
+            if stacked_cache is None:
+                f = lambda q, v: mamba_layer_fwd(q, cfg, v, None, backend)
+                if remat:
+                    f = jax.checkpoint(f)
+                x2, _ = f(xs, x)
+                return x2, None
+            lp, lc = xs
+            x2, nc = mamba_layer_fwd(lp, cfg, x, lc, backend)
+            return x2, nc
+        xs = stacked if stacked_cache is None else (stacked, stacked_cache)
+        return lax.scan(fn, x, xs)
+
+    if n_groups:
+        def group_fn(x, xs):
+            if caches is None:
+                gp, ap = xs
+                x, _ = mamba_scan(x, gp, None)
+                x, _ = _shared_block_fwd(p["shared"], ap, cfg, x, x0, positions, None)
+                return x, None
+            gp, ap, gc, ac = xs
+            x, ncm = mamba_scan(x, gp, gc)
+            x, nca = _shared_block_fwd(p["shared"], ap, cfg, x, x0, positions, ac)
+            return x, (ncm, nca)
+
+        if caches is None:
+            x, _ = lax.scan(group_fn, x, (p["groups"], p["app_in"]))
+        else:
+            x, (ncm, nca) = lax.scan(
+                group_fn, x, (p["groups"], p["app_in"], caches["groups"], caches["attn"]))
+            new_caches["groups"], new_caches["attn"] = ncm, nca
+
+    if tail:
+        x, nct = mamba_scan(x, p["tail"], caches["tail"] if caches else None)
+        if caches is not None:
+            new_caches["tail"] = nct
+
+    return x, (new_caches or None), jnp.zeros((), jnp.float32)
+
+
+def init_trunk_caches(cfg, batch: int, seq_len: int, dtype=jnp.float32) -> Params:
+    every, n_groups, tail = _split(cfg)
+    m = mamba2.init_cache(cfg, batch, dtype)
+    caches: Params = {}
+    if n_groups:
+        caches["groups"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups, every) + a.shape).copy(), m)
+        caches["attn"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(),
+            L.init_kv_cache(cfg, batch, seq_len, dtype))
+    if tail:
+        caches["tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (tail,) + a.shape).copy(), m)
+    return caches

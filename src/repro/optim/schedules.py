@@ -1,0 +1,17 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000,
+                  floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, warmup))
+    frac = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def constant(step, **_):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))

@@ -1,0 +1,163 @@
+"""Chunked, overlap-friendly collective matmuls (shard_map + lax.ppermute).
+
+These are the TPU-native runtime artifacts that Lagom's tuned parameters
+select (DESIGN.md §2):
+
+  * ``C`` (chunk size)      -> ``num_chunks`` of each decomposed collective
+  * ``Algorithm``           -> ``strategy``: "xla" (one fused collective,
+                               scheduling left to XLA's latency-hiding
+                               scheduler) | "ring" (explicit ppermute ring)
+                               | "chunked" (scan of partial collectives)
+  * ``NC`` (channels)       -> modeled in the simulator (DMA concurrency);
+                               on real HW it maps to
+                               ``--xla_tpu_scoped_vmem_limit_kib`` style
+                               staging limits, which have no HLO footprint.
+
+Every function has a dense reference (``*_ref``) used by the tests, and the
+explicit variants are HLO-visible: the dry-run roofline counts their
+collective-permute / reduce-scatter bytes, so tuned chunk counts actually
+move the measured collective term.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+
+@dataclass(frozen=True)
+class CollectiveRuntime:
+    """Runtime knobs for one collective site (what `core.apply` emits)."""
+    strategy: str = "xla"        # xla | ring | chunked
+    num_chunks: int = 1
+
+
+# ---------------------------------------------------------------------------
+# all-gather ∘ matmul  (column-parallel matmul with sequence-sharded input)
+#   x: (..., T, D) sharded on T over `axis`;  w: (D, F) sharded on F
+#   y = allgather_T(x) @ w   -> (..., n*Tl, F_local)
+# ---------------------------------------------------------------------------
+
+def ag_matmul_ref(x, w):
+    return x @ w
+
+
+def _ring_ag_matmul_local(x, w, *, axis: str, num_chunks: int):
+    """Per-device body: hold one sequence shard, rotate shards around the
+    ring; each step multiplies the currently-held shard so communication of
+    the next shard overlaps with this step's matmul."""
+    n = lax.axis_size(axis)
+    idx = lax.axis_index(axis)
+    Tl = x.shape[-2]
+    out_shape = x.shape[:-2] + (n * Tl, w.shape[-1])
+    perm = [(j, (j - 1) % n) for j in range(n)]
+
+    def chunked_mm(xs):
+        if num_chunks <= 1 or Tl % num_chunks:
+            return xs @ w
+        c = Tl // num_chunks
+        blocks = jnp.stack(jnp.split(xs, num_chunks, axis=-2))
+        ys = lax.map(lambda b: b @ w, blocks)
+        return jnp.concatenate(list(ys), axis=-2)
+
+    def body(i, carry):
+        x_cur, out = carry
+        src = (idx + i) % n                 # whose shard we currently hold
+        y = chunked_mm(x_cur)
+        out = lax.dynamic_update_slice_in_dim(out, y, src * Tl, axis=-2)
+        x_cur = lax.ppermute(x_cur, axis, perm)
+        return (x_cur, out)
+
+    out = jnp.zeros(out_shape, x.dtype)
+    try:  # newer jax: align varying-manual-axes type with the inputs
+        vma = tuple(set(jax.typeof(x).vma) | set(jax.typeof(w).vma))
+        out = lax.pvary(out, vma)
+    except AttributeError:
+        pass
+    _, out = lax.fori_loop(0, n, body, (x, out))
+    return out
+
+
+def ring_ag_matmul(x, w, mesh: Mesh, *, axis: str = "model",
+                   x_spec: P, w_spec: P, out_spec: P,
+                   num_chunks: int = 1):
+    fn = shard_map(partial(_ring_ag_matmul_local, axis=axis, num_chunks=num_chunks),
+                   mesh=mesh, in_specs=(x_spec, w_spec), out_specs=out_spec)
+    return fn(x, w)
+
+
+# ---------------------------------------------------------------------------
+# matmul ∘ reduce-scatter  (row-parallel matmul)
+#   x: (..., T, Fl) F-sharded over `axis`; w: (Fl, D)
+#   y = reduce_scatter_T( x @ w )  -> (..., T/n, D)
+# ---------------------------------------------------------------------------
+
+def mm_rs_ref(x, w):
+    return x @ w
+
+
+def _mm_rs_local(x, w, *, axis: str, num_chunks: int):
+    n = lax.axis_size(axis)
+    T = x.shape[-2]
+    if num_chunks <= 1 or T % (num_chunks * n):
+        y = x @ w
+        return lax.psum_scatter(y, axis, scatter_dimension=y.ndim - 2, tiled=True)
+    # tile-aligned chunking: chunk i must contain rows {j·T/n + i·s ... } for
+    # every destination shard j so the concatenated per-chunk scatters equal
+    # the single full scatter.
+    s = T // (n * num_chunks)
+    lead = x.shape[:-2]
+    xr = x.reshape(lead + (n, num_chunks, s, x.shape[-1]))
+    blocks = jnp.moveaxis(xr, -3, 0)                     # (nc, ..., n, s, F)
+    blocks = blocks.reshape((num_chunks,) + lead + (n * s, x.shape[-1]))
+
+    def one(b):
+        y = b @ w
+        return lax.psum_scatter(y, axis, scatter_dimension=y.ndim - 2, tiled=True)
+
+    ys = lax.map(one, blocks)        # chunked: scatter of chunk i overlaps mm of i+1
+    return jnp.concatenate(list(ys), axis=-2)
+
+
+def mm_reduce_scatter(x, w, mesh: Mesh, *, axis: str = "model",
+                      x_spec: P, w_spec: P, out_spec: P, num_chunks: int = 1):
+    fn = shard_map(partial(_mm_rs_local, axis=axis, num_chunks=num_chunks),
+                   mesh=mesh, in_specs=(x_spec, w_spec), out_specs=out_spec)
+    return fn(x, w)
+
+
+# ---------------------------------------------------------------------------
+# chunked all-to-all (MoE dispatch/combine)
+#   x: (..., E, capl, D) with E sharded over `axis` on entry or exit
+# ---------------------------------------------------------------------------
+
+def chunked_all_to_all(x, mesh: Mesh, *, axis: str = "model",
+                       split_axis: int, concat_axis: int,
+                       x_spec: P, out_spec: P, num_chunks: int = 1):
+    """lax.all_to_all decomposed into ``num_chunks`` sequential a2a's over
+    the trailing feature dim, so expert FFN compute on early chunks overlaps
+    the transfer of later ones (the EP dual-batch pattern)."""
+    def local(xl):
+        if num_chunks <= 1 or xl.shape[-1] % num_chunks:
+            return lax.all_to_all(xl, axis, split_axis, concat_axis, tiled=True)
+        blocks = jnp.stack(jnp.split(xl, num_chunks, axis=-1))
+        ys = lax.map(lambda b: lax.all_to_all(b, axis, split_axis, concat_axis,
+                                              tiled=True), blocks)
+        return jnp.concatenate(list(ys), axis=-1)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(x_spec,), out_specs=out_spec)
+    return fn(x)
+
+
+# ---------------------------------------------------------------------------
+# plain helpers used by the trainer (gradient sync in explicit-DP mode)
+# ---------------------------------------------------------------------------
+
+def psum_tree(tree, axis: str):
+    return jax.tree.map(lambda a: lax.psum(a, axis), tree)

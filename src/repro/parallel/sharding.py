@@ -1,0 +1,208 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+Scheme (the paper-faithful baseline; §Perf iterates on it):
+  * 2-D FSDP × TP: every matrix shards its "feature-parallel" dim over the
+    ``model`` axis (attention heads, FFN hidden, experts, vocab) and the
+    other dim over the FSDP axes (``data``, plus ``pod`` when multi-pod).
+  * MoE expert weights shard the expert dim over ``model`` (expert
+    parallelism); non-divisible expert counts are padded (qwen2-moe 60→64).
+  * 1-D params (norm scales, biases of FSDP'd outputs) are replicated.
+  * Batch shards over (pod, data).  When the batch is too small
+    (long_500k: B=1) decode caches shard their *sequence* dim over ``data``
+    instead (GSPMD context parallelism).
+
+Rules are path-regex → spec template; templates use placeholders
+  F = fsdp axes, T = "model", E = expert dim over "model".
+A rule's spec matches the *trailing* dims of the array; extra leading dims
+(stacked layers / groups) are replicated (None).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# (path regex, spec template applied to trailing dims)
+# Templates: "F"->fsdp, "T"->model, None->replicated.
+_RULES: Sequence[Tuple[str, Tuple[Any, ...]]] = (
+    # embeddings / head
+    (r"embed/table$",              ("T", "F")),
+    (r"head/w$",                   ("F", "T")),
+    (r"dec_pos$",                  ("F", None)),
+    (r"enc_pos$",                  (None, None)),
+    # attention (gqa)
+    (r"attn/[qkv]/w$",             ("F", "T")),
+    (r"attn/[qkv]/b$",             ("T",)),
+    (r"attn/o/w$",                 ("T", "F")),
+    (r"attn/o/b$",                 (None,)),
+    (r"(self|cross)_attn/[qkv]/w$", ("F", "T")),
+    (r"(self|cross)_attn/[qkv]/b$", ("T",)),
+    (r"(self|cross)_attn/o/w$",    ("T", "F")),
+    (r"(self|cross)_attn/o/b$",    (None,)),
+    # attention (mla)
+    (r"attn/q/w$",                 ("F", "T")),
+    (r"attn/q_a/w$",               ("F", None)),
+    (r"attn/q_b/w$",               (None, "T")),
+    (r"attn/kv_a/w$",              ("F", None)),
+    (r"attn/kv_b/w$",              (None, "T")),
+    # mlps
+    (r"(mlp|shared)/(gate|up)/w$", ("F", "T")),
+    (r"(mlp|shared)/(gate|up)/b$", ("T",)),
+    (r"(mlp|shared)/down/w$",      ("T", "F")),
+    (r"(mlp|shared)/down/b$",      (None,)),
+    # moe
+    (r"moe/router/w$",             ("F", None)),
+    (r"moe/(gate|up)$",            ("T", "F", None)),
+    (r"moe/down$",                 ("T", None, "F")),
+    (r"moe/shared_gate/w$",        (None, None)),
+    # rwkv6 time-mix / channel-mix
+    (r"tm/W[rkvg]$",               ("F", "T")),
+    (r"tm/Wo$",                    ("T", "F")),
+    (r"tm/maa_w1$",                ("F", None)),
+    (r"tm/decay_w1$",              ("F", None)),
+    (r"tm/decay_w2$",              (None, "F")),
+    (r"tm/bonus$",                 ("T", None)),
+    (r"cm/Wk$",                    ("F", "T")),
+    (r"cm/Wv$",                    ("T", "F")),
+    (r"cm/Wr$",                    ("F", "T")),
+    # mamba2
+    (r"mamba/(z_proj|xbc_proj)/w$", ("F", "T")),
+    (r"mamba/dt_proj/w$",          ("F", None)),
+    (r"mamba/out_proj/w$",         ("T", "F")),
+    (r"mamba/conv_w$",             (None, "T")),
+    (r"mamba/conv_b$",             ("T",)),
+    # zamba2 per-application adapters
+    (r"app_in/w$",                 ("F", "T")),
+)
+
+
+def _expand(template, fsdp, tp):
+    out = []
+    for t in template:
+        if t == "F":
+            out.append(fsdp if len(fsdp) > 1 else fsdp[0])
+        elif t == "T":
+            out.append(tp)
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def _divisible(shape, spec, mesh_shape) -> bool:
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([mesh_shape[a] for a in axes]))
+        if dim % n != 0:
+            return False
+    return True
+
+
+def param_specs(params_tree, mesh, *, fsdp_axes: Tuple[str, ...] = ("data",),
+                tp_axis: "str | None" = "model"):
+    """PartitionSpec pytree for a params (or shape) pytree."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        for rx, template in _RULES:
+            if re.search(rx, pstr):
+                spec = _expand(template, fsdp_axes, tp_axis)
+                lead = len(shape) - len(spec)
+                if lead < 0:
+                    break
+                full = (None,) * lead + spec
+                # drop axes that don't divide evenly (fall back per-dim)
+                full = tuple(ax if ax is not None and shape[i] % int(np.prod(
+                    [mesh_shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))])) == 0
+                    else None for i, ax in enumerate(full))
+                return P(*full)
+        return P()  # replicate (norms, scalars, loras)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def batch_specs(cfg, batch_tree, mesh, *, dp_axes: Tuple[str, ...] = ("data",)):
+    """Batch dim over the data-parallel axes when divisible, else replicate."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([mesh_shape[a] for a in dp_axes]))
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        B = leaf.shape[0] if leaf.ndim else 0
+        lead = dp_spec if B and B % dp == 0 else None
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree, is_leaf=lambda x: x is None)
+
+
+def cache_specs(cfg, caches_tree, mesh, *, dp_axes: Tuple[str, ...] = ("data",),
+                tp_axis: "str | None" = "model"):
+    """Decode-cache sharding.  Layout per leaf (after any stacked leading
+    dims): KV caches (B, S, N, h) — batch over data when divisible else
+    sequence over data; heads over model.  States (B, H, K, V) — heads over
+    model.  Conv/shift small leaves: batch over data if divisible."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([mesh_shape[a] for a in dp_axes]))
+    tp = mesh_shape[tp_axis] if tp_axis else 10**9   # None -> never divides
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        nd = leaf.ndim
+        if nd == 0 or pstr.endswith("pos") or "slot_pos" in pstr:
+            return P()
+        spec = [None] * nd
+        # find the batch dim: first dim that is not a stacked-layer dim.
+        # caches are built with stacked leading dims; identify the batch dim
+        # as the dim whose size matches known batch... heuristic: use the
+        # last 3-4 dims by leaf kind.
+        if re.search(r"(^|/)(k|v|c_kv|k_rope)$", pstr):
+            # (..., B, S, N, h) or (..., B, S, rank)
+            b_ax = nd - (4 if pstr.endswith(("k", "v", "k_rope")) else 3)
+            s_ax = b_ax + 1
+            if shape[b_ax] % dp == 0:
+                spec[b_ax] = dp_spec
+            elif shape[s_ax] % dp == 0:
+                spec[s_ax] = dp_spec           # context parallelism (B too small)
+            if pstr.endswith(("k", "v")) and shape[nd - 2] % tp == 0:
+                spec[nd - 2] = tp_axis          # kv heads over model
+            elif spec[s_ax] is None and shape[s_ax] % tp == 0:
+                spec[s_ax] = tp_axis            # kv heads don't divide tp:
+                                                # shard the sequence instead
+            elif not pstr.endswith(("k", "v")) and shape[nd - 1] % tp == 0:
+                spec[nd - 1] = tp_axis          # MLA latent rank over model
+        elif re.search(r"(wkv|state)$", pstr):
+            # (..., B, H, K/P, V/N)
+            b_ax = nd - 4
+            if shape[b_ax] % dp == 0:
+                spec[b_ax] = dp_spec
+            if shape[nd - 3] % tp == 0:
+                spec[nd - 3] = tp_axis
+        elif re.search(r"(shift_tm|shift_cm|conv|memory)$", pstr):
+            b_ax = max(0, nd - 3)
+            if shape[b_ax] % dp == 0:
+                spec[b_ax] = dp_spec
+            if shape[nd - 1] % tp == 0 and pstr.endswith("conv"):
+                spec[nd - 1] = tp_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, caches_tree)

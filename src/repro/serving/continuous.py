@@ -1,0 +1,127 @@
+"""Continuous batching: per-slot caches + request queue.
+
+The fixed-batch Engine decodes in lockstep (one shared position counter).
+This engine vmaps the single-sequence decode over a slot axis, so every
+slot has its own position/cache state; finished slots are refilled from the
+queue without disturbing the others — the standard continuous-batching
+serving loop, built on the same ``model.decode_step``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new: int
+    out: List[int] = field(default_factory=list)
+
+
+class ContinuousEngine:
+    """``slots`` independent sequences decoded as one vmapped batch."""
+
+    def __init__(self, cfg, params, *, slots: int, max_seq: int,
+                 eos_id: Optional[int] = None):
+        assert cfg.family != "audio", "continuous engine is decoder-only"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+
+        # per-slot caches: the B axis of one shared pytree acts as the slot
+        # axis; decode is vmapped over it so each slot keeps its own pos.
+        self.caches = jax.vmap(lambda _: M.init_caches(cfg, 1, max_seq))(
+            jnp.arange(slots))
+
+        def step_one(params, tok, cache):
+            logits, cache = M.decode_step(cfg, params, tok[None, None], cache)
+            nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            return nxt, cache
+
+        self._step = jax.jit(jax.vmap(step_one, in_axes=(None, 0, 0)))
+
+        def prefill_one(params, toks, length, cache):
+            # right-padded prompt: clamp pos back to the true length and
+            # invalidate padded KV slots (slot_pos = -1) so decode never
+            # attends to them.  NOTE: SSM/hybrid states absorb padding during
+            # a padded prefill — those families need length-bucketed admits
+            # (documented limitation of this demo engine).
+            _, cache, _ = M.forward_hidden(cfg, params, {"tokens": toks[None]},
+                                           cache)
+
+            def fix(path, leaf):
+                name = str(getattr(path[-1], "key", ""))
+                if name == "slot_pos":        # (..., W)
+                    idx = jnp.arange(leaf.shape[-1])
+                    return jnp.where(idx < length, leaf, -1)
+                return leaf
+
+            cache = jax.tree_util.tree_map_with_path(fix, cache)
+            return dict(cache, pos=length.astype(jnp.int32))
+
+        self._prefill = jax.jit(jax.vmap(prefill_one, in_axes=(None, 0, 0, 0)))
+
+        self._active: Dict[int, Request] = {}      # slot -> request
+        self._queue: List[Request] = []
+        self._cur = jnp.zeros((slots,), jnp.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.slots) if s not in self._active]
+        admits = []
+        while free and self._queue:
+            slot = free.pop(0)
+            req = self._queue.pop(0)
+            self._active[slot] = req
+            admits.append((slot, req))
+        if not admits:
+            return
+        plen = max(len(r.prompt) for _, r in admits)
+        toks = np.zeros((len(admits), plen), np.int32)
+        lens = np.zeros((len(admits),), np.int32)
+        for i, (_, r) in enumerate(admits):
+            toks[i, :len(r.prompt)] = r.prompt
+            lens[i] = len(r.prompt)
+        fresh = jax.vmap(lambda _: M.init_caches(self.cfg, 1, self.max_seq))(
+            jnp.arange(len(admits)))
+        filled = self._prefill(self.params, jnp.asarray(toks),
+                               jnp.asarray(lens), fresh)
+        # scatter the admitted slots' caches / current tokens into place
+        slot_ids = jnp.asarray([s for s, _ in admits])
+        self.caches = jax.tree.map(
+            lambda all_, new: all_.at[slot_ids].set(new), self.caches, filled)
+        last = jnp.asarray([int(r.prompt[-1]) for _, r in admits], jnp.int32)
+        self._cur = self._cur.at[slot_ids].set(last)
+
+    # ------------------------------------------------------------------
+    def run(self, *, max_ticks: int = 1000) -> List[Request]:
+        """Drive until queue + active slots drain; returns finished requests."""
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            self._admit()
+            if not self._active:
+                break
+            nxt, self.caches = self._step(self.params, self._cur, self.caches)
+            self._cur = nxt
+            finished = []
+            for slot, req in self._active.items():
+                t = int(nxt[slot])
+                req.out.append(t)
+                if len(req.out) >= req.max_new or t == self.eos_id:
+                    finished.append(slot)
+            for slot in finished:
+                done.append(self._active.pop(slot))
+        return done

@@ -1,0 +1,85 @@
+"""Batched serving engine: continuous-batching-lite decode loop with
+prefill-into-cache and greedy/temperature sampling.
+
+``serve_step`` (one token against a seq_len cache) is the function the
+decode-shape dry-runs lower; the Engine wraps it for the runnable examples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 32
+    out: List[int] = field(default_factory=list)
+
+
+def make_serve_step(cfg, *, backend: Optional[str] = None):
+    """serve_step(params, tokens (B,1), caches) -> (next (B,1), caches)."""
+    def serve_step(params, tokens, caches):
+        logits, caches = M.decode_step(cfg, params, tokens, caches,
+                                       backend=backend)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+    return serve_step
+
+
+class Engine:
+    """Fixed-batch decode engine (the examples' serving driver)."""
+
+    def __init__(self, cfg, params, *, batch_size: int, max_seq: int,
+                 backend: Optional[str] = None):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_seq = max_seq
+        self.backend = backend
+        self._step = jax.jit(make_serve_step(cfg, backend=backend))
+        self._prefill = jax.jit(
+            lambda p, b, c: M.forward_hidden(cfg, p, b, c, backend=backend)[1])
+
+    def generate(self, prompts: List[np.ndarray], *, max_new: int = 32,
+                 frames: Optional[np.ndarray] = None) -> List[List[int]]:
+        assert len(prompts) == self.batch
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((self.batch, plen), np.int32)
+        for i, p in enumerate(prompts):    # left-pad-free: right-align naive
+            toks[i, :len(p)] = p
+        caches = M.init_caches(self.cfg, self.batch, self.max_seq)
+        if self.cfg.family == "audio":
+            assert frames is not None
+            caches["memory"] = jnp.asarray(frames)
+        batch = {"tokens": jnp.asarray(toks)}
+        caches = self._prefill(self.params, batch, caches)
+        cur = jnp.asarray(toks[:, -1:])
+        outs: List[List[int]] = [[] for _ in range(self.batch)]
+        for _ in range(max_new):
+            cur, caches = self._step(self.params, cur, caches)
+            for i, t in enumerate(np.asarray(cur)[:, 0]):
+                outs[i].append(int(t))
+        return outs
+
+    def throughput_probe(self, *, steps: int = 8) -> Dict[str, float]:
+        caches = M.init_caches(self.cfg, self.batch, self.max_seq)
+        if self.cfg.family == "audio":
+            caches["memory"] = jnp.zeros(
+                (self.batch, self.cfg.encoder_seq, self.cfg.d_model))
+        cur = jnp.zeros((self.batch, 1), jnp.int32)
+        cur, caches = self._step(self.params, cur, caches)   # compile
+        jax.block_until_ready(cur)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            cur, caches = self._step(self.params, cur, caches)
+        jax.block_until_ready(cur)
+        dt = (time.perf_counter() - t0) / steps
+        return {"s_per_token": dt, "tokens_per_s": self.batch / dt}

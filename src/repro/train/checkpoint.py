@@ -1,0 +1,65 @@
+"""Checkpointing: msgpack-free, numpy ``.npz`` + structure manifest.
+
+Works on any pytree of arrays (params, optimizer state, data-pipeline
+cursor).  Writes are atomic (tmp file + rename); a ``latest`` symlink tracks
+the newest step, and ``keep`` bounds retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}, treedef
+
+
+def save(path: str, tree, *, step: int, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    os.makedirs(path, exist_ok=True)
+    arrays, treedef = _flatten(tree)
+    ck = os.path.join(path, f"step_{step:08d}")
+    tmp = ck + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "num_leaves": len(arrays), "extra": extra or {}}, f)
+    if os.path.exists(ck):
+        shutil.rmtree(ck)
+    os.rename(tmp, ck)
+    latest = os.path.join(path, "latest")
+    with open(latest, "w") as f:
+        f.write(os.path.basename(ck))
+    _gc(path, keep)
+    return ck
+
+
+def restore(path: str, tree_like, *, step: Optional[int] = None):
+    """Restores into the structure of ``tree_like``; returns (tree, step)."""
+    if step is None:
+        with open(os.path.join(path, "latest")) as f:
+            ck = os.path.join(path, f.read().strip())
+    else:
+        ck = os.path.join(path, f"step_{step:08d}")
+    with np.load(os.path.join(ck, "arrays.npz")) as z:
+        arrays = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    with open(os.path.join(ck, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(tree_like)
+    assert len(leaves) == len(arrays), \
+        f"checkpoint has {len(arrays)} leaves, model expects {len(leaves)}"
+    restored = jax.tree.unflatten(treedef, arrays)
+    return restored, manifest["step"]
+
+
+def _gc(path: str, keep: int) -> None:
+    cks = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    for d in cks[:-keep]:
+        shutil.rmtree(os.path.join(path, d), ignore_errors=True)

@@ -1,0 +1,53 @@
+"""Training metrics: analytic step FLOPs and MFU accounting.
+
+MFU = model FLOPs (6·N_active·tokens, no remat credit) / wall / peak —
+the MaxText/PaLM convention; hardware peaks default to TPU v5e.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+TPU_V5E_PEAK = 197e12
+
+
+@dataclass
+class StepFlops:
+    model: float        # 6·N_active·tokens (the MFU numerator)
+    executed: float     # incl. remat recompute (8·N_active·tokens)
+
+
+def train_step_flops(cfg, tokens: int, *, remat: bool = True) -> StepFlops:
+    n = cfg.param_count(active_only=True)
+    return StepFlops(model=6.0 * n * tokens,
+                     executed=(8.0 if remat else 6.0) * n * tokens)
+
+
+def mfu(cfg, tokens: int, step_seconds: float, *, chips: int = 1,
+        peak: float = TPU_V5E_PEAK) -> float:
+    f = train_step_flops(cfg, tokens)
+    return f.model / max(step_seconds, 1e-12) / (chips * peak)
+
+
+class Tracker:
+    """Rolling window over step metrics; used by the train loop."""
+
+    def __init__(self, cfg, tokens_per_step: int, *, chips: int = 1,
+                 peak: float = TPU_V5E_PEAK, window: int = 20):
+        self.cfg = cfg
+        self.tokens = tokens_per_step
+        self.chips = chips
+        self.peak = peak
+        self.window = window
+        self.times: list = []
+
+    def update(self, step_seconds: float) -> Dict[str, float]:
+        self.times.append(step_seconds)
+        recent = self.times[-self.window:]
+        avg = sum(recent) / len(recent)
+        return {
+            "step_s": step_seconds,
+            "tokens_per_s": self.tokens / avg,
+            "mfu": mfu(self.cfg, self.tokens, avg, chips=self.chips,
+                       peak=self.peak),
+        }

@@ -1,0 +1,54 @@
+"""Tuned configs are real compile-time artifacts: a Lagom chunk count of n
+must produce n partial collectives in the lowered HLO (subprocess with an
+8-device host mesh)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_test_mesh
+from repro.parallel.collectives import mm_reduce_scatter, chunked_all_to_all
+from repro.core.apply import to_runtime
+from repro.core.comm_params import CommConfig
+
+mesh = make_test_mesh((2, 4), ("data", "model"))
+x = jnp.ones((2, 32, 64))
+w = jnp.ones((64, 32))
+
+def count(hlo, op):
+    return hlo.count(f" {op}(") + hlo.count(f" {op}-start(")
+
+for nc in (1, 2, 4):
+    f = jax.jit(lambda x, w: mm_reduce_scatter(
+        x, w, mesh, axis="model", x_spec=P("data", None, "model"),
+        w_spec=P("model", None), out_spec=P("data", "model", None),
+        num_chunks=nc))
+    hlo = f.lower(x, w).compile().as_text()
+    n_rs = count(hlo, "reduce-scatter")
+    assert n_rs >= 1, (nc, n_rs)
+    # chunked variants run the scatter inside a loop body (or unrolled):
+    # the HLO must contain the loop / n partial scatters, never a single
+    # monolithic scatter for nc>1
+    if nc > 1:
+        assert ("while" in hlo) or n_rs >= nc, (nc, n_rs, "no chunk structure")
+
+# the tuner's chunk_kb maps to ceil(bytes/chunk)
+rt = to_runtime(CommConfig(algorithm="ring", chunk_kb=64), 512 * 1024)
+assert rt.num_chunks == 8 and rt.strategy == "ring"
+print("SUBPROCESS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_tuned_chunks_visible_in_hlo():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "SUBPROCESS_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,64 @@
+"""Chunked overlapped collectives vs dense references, on an 8-device host
+mesh (spawned in a subprocess so the main test session keeps 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.parallel import collectives as C
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((2, 4), ("data", "model"))
+rng = jax.random.PRNGKey(0)
+x = jax.random.normal(rng, (2, 16, 32))
+w = jax.random.normal(rng, (32, 64))
+for nc in (1, 2, 4):
+    y = C.ring_ag_matmul(x, w, mesh, axis="model",
+                         x_spec=P("data", "model", None), w_spec=P(None, "model"),
+                         out_spec=P("data", None, "model"), num_chunks=nc)
+    assert float(jnp.abs(y - x @ w).max()) < 1e-4, ("ring_ag", nc)
+
+xf = jax.random.normal(rng, (2, 16, 64))
+wf = jax.random.normal(rng, (64, 32))
+for nc in (1, 2, 4):
+    y = C.mm_reduce_scatter(xf, wf, mesh, axis="model",
+                            x_spec=P("data", None, "model"), w_spec=P("model", None),
+                            out_spec=P("data", "model", None), num_chunks=nc)
+    assert float(jnp.abs(y - xf @ wf).max()) < 1e-3, ("mm_rs", nc)
+
+xa = jax.random.normal(rng, (8, 4, 16))
+ref = None
+for nc in (1, 2, 4):
+    y = C.chunked_all_to_all(xa, mesh, axis="model", split_axis=1, concat_axis=0,
+                             x_spec=P("model", None, None),
+                             out_spec=P("model", None, None), num_chunks=nc)
+    ref = y if ref is None else ref
+    assert float(jnp.abs(y - ref).max()) < 1e-6, ("a2a", nc)
+
+# sharding rules produce valid NamedShardings on this mesh
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.parallel import sharding as SH
+cfg = get_smoke_config("h2o-danube-1.8b")
+params = M.init_params(cfg, rng)
+spec = SH.param_specs(params, mesh)
+from jax.sharding import NamedSharding
+sharded = jax.device_put(params, jax.tree.map(lambda s: NamedSharding(mesh, s), spec))
+assert jax.tree.all(jax.tree.map(lambda a: bool(jnp.isfinite(a).all()), sharded))
+print("SUBPROCESS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_collectives_on_8_devices():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "SUBPROCESS_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,50 @@
+"""Config registry + analytic parameter counts vs advertised sizes."""
+import pytest
+
+from repro.configs import (ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES,
+                           get_config, get_smoke_config, shape_applicable)
+
+ADVERTISED_B = {
+    "rwkv6-1.6b": 1.6, "zamba2-7b": 7.0, "h2o-danube-1.8b": 1.8,
+    "qwen2-moe-a2.7b": 14.3, "stablelm-3b": 3.0, "whisper-small": 0.24,
+    "phi4-mini-3.8b": 3.8, "qwen2-vl-72b": 72.0, "yi-34b": 34.0,
+    "deepseek-v2-lite-16b": 15.7,
+}
+
+
+def test_registry_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(ALL_ARCHS) == 15
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_counts_match_advertised(arch):
+    cfg = get_config(arch)
+    got = cfg.param_count() / 1e9
+    want = ADVERTISED_B[arch]
+    assert abs(got - want) / want < 0.25, f"{arch}: {got:.2f}B vs {want}B"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_reduction_bounds(arch):
+    s = get_smoke_config(arch)
+    assert s.num_layers <= 2
+    assert s.d_model <= 512
+    assert s.num_experts <= 4
+    assert s.family == get_config(arch).family
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen2-moe-a2.7b")
+    active = cfg.param_count(active_only=True) / 1e9
+    assert 2.0 < active < 3.5          # the "A2.7B" in the name
+
+
+def test_long_context_applicability():
+    long = INPUT_SHAPES["long_500k"]
+    eligible = [a for a in ASSIGNED_ARCHS
+                if shape_applicable(get_config(a), long)[0]]
+    assert sorted(eligible) == ["h2o-danube-1.8b", "rwkv6-1.6b", "zamba2-7b"]
+    for a in ASSIGNED_ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), INPUT_SHAPES[s])[0]

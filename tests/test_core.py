@@ -1,0 +1,149 @@
+"""Lagom core behaviour: simulator, tuners, baselines, cost model."""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (A40_NVLINK, A40_PCIE, TPU_V5E, CommConfig, ParallelPlan,
+                        Simulator, extract_workload, min_config, vendor_default)
+from repro.core import autoccl, contention, cost_model, tuner
+from repro.core.baselines import nccl_defaults
+from repro.core.priority import metric_h
+from repro.core.workload import CommOp, CompOp, OverlapGroup, Workload, matmul_comp
+
+
+def _fsdp_workload(model="phi2-2b", dp=8, layers=4):
+    cfg = get_config(model)
+    return extract_workload(cfg, ParallelPlan(kind="fsdp", dp=dp),
+                            seq=2048, global_batch=16, layers=layers)
+
+
+def test_simulator_z_at_least_busy_times():
+    wl = _fsdp_workload()
+    sim = Simulator(A40_NVLINK)
+    m = sim.profile(wl, nccl_defaults(wl, A40_NVLINK))
+    for g in m.groups:
+        assert g.Z >= g.X - 1e-9
+        assert g.Z >= g.Y - 1e-9
+        assert g.Z <= g.X + g.Y + 1e-9
+
+
+def test_lagom_beats_nccl_and_autoccl_fsdp():
+    wl = _fsdp_workload(layers=6)
+    for hw in (A40_NVLINK, A40_PCIE):
+        sim = Simulator(hw, noise=0.01, seed=0)
+        base = sim.profile(wl, nccl_defaults(wl, hw))
+        cfgs, _, _ = tuner.tune_workload(sim, wl)
+        lag = sim.profile(wl, cfgs)
+        ac_cfgs, _ = autoccl.tune_workload(Simulator(hw, noise=0.01, seed=1), wl)
+        ac = sim.profile(wl, ac_cfgs)
+        assert base.Z / lag.Z > 1.01, hw.name            # beats NCCL
+        assert ac.Z / lag.Z > 1.05, hw.name              # beats AutoCCL
+
+
+def test_autoccl_overallocates_in_compute_bound():
+    """The paper's Fig. 8 phenomenon: a comm-only tuner lands below NCCL."""
+    wl = _fsdp_workload(layers=6)
+    hw = A40_NVLINK
+    sim = Simulator(hw, noise=0.01, seed=0)
+    base = sim.profile(wl, nccl_defaults(wl, hw))
+    ac_cfgs, _ = autoccl.tune_workload(Simulator(hw, noise=0.01, seed=1), wl)
+    ac = sim.profile(wl, ac_cfgs)
+    assert ac.Z > base.Z                     # worse end-to-end
+    assert ac_cfgs[(0, 0)].nc >= 32          # over-allocated channels
+
+
+def test_lagom_config_shape_matches_paper():
+    """Fig. 8: Lagom lands at low NC + sub-default chunk (NC=2..8, C<2MB)."""
+    wl = _fsdp_workload(layers=6)
+    sim = Simulator(A40_NVLINK, noise=0.01, seed=0)
+    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    s = cfgs[(0, 0)]
+    assert s.nc <= A40_NVLINK.default_nc
+    assert s.chunk_kb <= A40_NVLINK.default_chunk_kb
+
+
+def test_tuner_linear_complexity():
+    """Profile count grows ~linearly in the number of communications."""
+    iters = {}
+    for layers in (2, 4, 8):
+        wl = _fsdp_workload(layers=layers)
+        sim = Simulator(A40_NVLINK, noise=0.0, seed=0)
+        _, n, _ = tuner.tune_workload(sim, wl)
+        iters[layers] = n
+    r1 = iters[4] / iters[2]
+    r2 = iters[8] / iters[4]
+    assert 1.5 < r1 < 2.8 and 1.5 < r2 < 2.8     # ~2x per comm doubling
+
+
+def test_nt_negligible():
+    """Sec. 3.2: NT affects neither comm nor comp time appreciably."""
+    op = CommOp("ar", "allreduce", 32e6, 8)
+    comp = matmul_comp("ffn", 4096, 2560, 10240)
+    for hw in (A40_NVLINK, TPU_V5E):
+        lo = CommConfig(nc=8, nt=64, chunk_kb=1024)
+        hi = CommConfig(nc=8, nt=640, chunk_kb=1024)
+        x_lo = contention.comm_time(op, lo, hw)
+        x_hi = contention.comm_time(op, hi, hw)
+        assert abs(x_lo - x_hi) / x_lo < 0.01
+        assert contention.comp_time(comp, lo, hw) == contention.comp_time(comp, hi, hw)
+
+
+def test_wave_model_calibration_fig3():
+    """NC 16->32 slows an FFN by ~30% ((84-16)/(84-32) = 1.308, paper: +30.2%)."""
+    comp = matmul_comp("ffn", 4096, 2560, 10240)
+    hw = A40_PCIE
+    t16 = contention.comp_time(comp, CommConfig(nc=16, chunk_kb=16), hw)
+    t32 = contention.comp_time(comp, CommConfig(nc=32, chunk_kb=16), hw)
+    assert 1.25 < t32 / t16 < 1.40
+
+
+def test_metric_h():
+    assert metric_h(1.0, 1.1, 2.0, 1.5) == pytest.approx(0.2)
+    assert metric_h(1.0, 1.1, 1.5, 2.0) == math.inf     # comm got slower
+
+
+def test_cost_model_consistent_with_simulator():
+    wl = _fsdp_workload(layers=3)
+    hw = A40_NVLINK
+    cfgs = nccl_defaults(wl, hw)
+    z_cm = cost_model.workload_makespan(wl, cfgs, hw)
+    z_sim = Simulator(hw).profile(wl, cfgs).Z
+    assert abs(z_cm - z_sim) / z_sim < 0.35    # closed form ~= event-driven
+
+
+@pytest.mark.parametrize("kind,model", [("tp", "llama3-8b"), ("ep", "olmoe-1b-7b")])
+def test_tp_ep_workloads_tune(kind, model):
+    cfg = get_config(model)
+    plan = ParallelPlan(kind=kind, tp=8 if kind == "tp" else 1,
+                        ep=8 if kind == "ep" else 1)
+    wl = extract_workload(cfg, plan, seq=2048, global_batch=16, layers=4)
+    sim = Simulator(A40_NVLINK, noise=0.01, seed=0)
+    base = sim.profile(wl, nccl_defaults(wl, A40_NVLINK))
+    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    tuned = sim.profile(wl, cfgs)
+    assert base.Z / tuned.Z > 1.0
+
+
+def test_decode_workload_extracts():
+    cfg = get_config("yi-34b")
+    wl = extract_workload(cfg, ParallelPlan(kind="tp", tp=16), seq=32768,
+                          global_batch=128, decode=True, layers=4)
+    assert wl.num_comms > 0
+    assert all(g.total_flops >= 0 for g in wl.groups)
+
+
+def test_warm_start_fewer_profiles_same_quality():
+    """Beyond-paper: cost-model warm-start matches cold-start quality with
+    meaningfully fewer ProfileTime invocations."""
+    wl = _fsdp_workload(layers=6)
+    hw = A40_NVLINK
+    res = {}
+    for warm in (False, True):
+        sim = Simulator(hw, noise=0.01, seed=0)
+        base = sim.profile(wl, nccl_defaults(wl, hw))
+        cfgs, iters, _ = tuner.tune_workload(sim, wl, warm_start=warm)
+        tuned = sim.profile(wl, cfgs)
+        res[warm] = (base.Z / tuned.Z, iters)
+    assert res[True][0] > res[False][0] - 0.02       # quality parity
+    assert res[True][1] < res[False][1] * 0.85       # >=15% fewer profiles

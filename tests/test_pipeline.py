@@ -1,0 +1,59 @@
+"""GPipe pipeline parallelism: shard_map ppermute schedule vs sequential
+stages (subprocess, 4 host devices), and the Lagom-tunable PP workload."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro.parallel.pipeline import pipeline_apply
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((4,), ("stage",))
+rng = jax.random.PRNGKey(0)
+S, D = 4, 16
+ws = jax.random.normal(rng, (S, D, D)) * 0.3
+bs = jnp.zeros((S, D))
+params = {"w": ws, "b": bs}
+
+def stage_fn(p, x):
+    return jax.nn.relu(x @ p["w"] + p["b"])
+
+x = jax.random.normal(jax.random.PRNGKey(1), (8, D))
+ref = x
+for i in range(S):
+    ref = stage_fn({"w": ws[i], "b": bs[i]}, ref)
+for M in (2, 4, 8):
+    y = pipeline_apply(stage_fn, params, x, mesh=mesh, microbatches=M)
+    assert float(jnp.abs(y - ref).max()) < 1e-5, M
+print("SUBPROCESS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "SUBPROCESS_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_pp_workload_extract_and_tune():
+    from repro.configs import get_config
+    from repro.core import (ParallelPlan, Simulator, TPU_V5E, extract_workload,
+                            tuner)
+    from repro.core.baselines import nccl_defaults
+    cfg = get_config("llama3-8b")
+    wl = extract_workload(cfg, ParallelPlan(kind="pp", pp=8, microbatches=8),
+                          seq=2048, global_batch=32)
+    assert wl.num_comms == 2 * (8 + 8 - 1)     # fwd + bwd ticks
+    sim = Simulator(TPU_V5E, noise=0.01, seed=0)
+    base = sim.profile(wl, nccl_defaults(wl, TPU_V5E))
+    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    tuned = sim.profile(wl, cfgs)
+    assert tuned.Z <= base.Z * 1.02

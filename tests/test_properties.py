@@ -1,0 +1,127 @@
+"""Hypothesis property tests on the system's invariants: contention model
+monotonicity, simulator conservation laws, tuner termination, comm-config
+clamping, data-pipeline determinism."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import contention
+from repro.core.comm_params import (C_MAX_KB, C_MIN_KB, NC_MAX, NC_MIN,
+                                    CommConfig, min_config)
+from repro.core.hardware import A40_NVLINK, A40_PCIE, TPU_V5E
+from repro.core.simulator import Simulator
+from repro.core.workload import CommOp, CompOp, OverlapGroup, matmul_comp
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+
+HW = st.sampled_from([A40_NVLINK, A40_PCIE, TPU_V5E])
+NC = st.integers(NC_MIN, NC_MAX)
+CHUNK = st.integers(C_MIN_KB, C_MAX_KB)
+BYTES = st.floats(1e4, 1e9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(hw=HW, nc=NC, chunk=CHUNK)
+def test_comp_time_macro_monotone_in_nc(hw, nc, chunk):
+    """Eq. 5: more channels -> never-meaningfully-faster computation.
+    (Wave quantization — the ceil in g — permits sub-0.1% wiggles when the
+    wave count stays constant while per-wave width shrinks, so monotonicity
+    is asserted at the 2% level plus strictly on the wave count itself.)"""
+    import math
+    comp = matmul_comp("m", 2048, 2048, 2048)
+    c1 = CommConfig(nc=nc, chunk_kb=chunk)
+    c2 = CommConfig(nc=min(NC_MAX, nc + 4), chunk_kb=chunk)
+    t1 = contention.comp_time(comp, c1, hw)
+    t2 = contention.comp_time(comp, c2, hw)
+    assert t2 >= t1 * 0.98
+    lam = hw.num_slots
+    g1 = math.ceil(comp.threadblocks / ((lam - min(c1.nc, int(lam * 0.75)))))
+    g2 = math.ceil(comp.threadblocks / ((lam - min(c2.nc, int(lam * 0.75)))))
+    assert g2 >= g1                     # strict monotonicity of the wave count
+
+
+@settings(max_examples=60, deadline=None)
+@given(hw=HW, nc=NC, chunk=CHUNK)
+def test_comp_time_bounded_below_by_alone(hw, nc, chunk):
+    comp = matmul_comp("m", 1024, 1024, 4096)
+    cfg = CommConfig(nc=nc, chunk_kb=chunk)
+    assert contention.comp_time(comp, cfg, hw) >= contention.comp_time_alone(comp, hw) - 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(hw=HW, nc=NC, chunk=CHUNK, nbytes=BYTES)
+def test_bandwidth_draw_bounded(hw, nc, chunk, nbytes):
+    cfg = CommConfig(nc=nc, chunk_kb=chunk)
+    v = contention.comm_bandwidth_draw(cfg, hw)
+    assert 0.0 <= v <= 0.85 * hw.hbm_bw
+    assert contention.wire_bandwidth(cfg, hw) <= hw.link_bw + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(hw=HW, nbytes=BYTES, n=st.integers(2, 64))
+def test_comm_time_positive_and_decreasing_in_bw(hw, nbytes, n):
+    op = CommOp("c", "allreduce", nbytes, n)
+    slow = CommConfig(nc=1, chunk_kb=C_MIN_KB)
+    fast = CommConfig(nc=16, chunk_kb=2048)
+    assert contention.comm_time(op, fast, hw) <= contention.comm_time(op, slow, hw)
+    assert contention.comm_time(op, slow, hw) > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(hw=HW,
+       comps=st.lists(st.tuples(st.integers(64, 2048), st.integers(64, 2048)),
+                      min_size=1, max_size=4),
+       comms=st.lists(st.floats(1e5, 5e8), min_size=0, max_size=4),
+       nc=NC, chunk=CHUNK)
+def test_simulator_conservation(hw, comps, comms, nc, chunk):
+    """Z >= max stream busy time; Z <= X + Y (two streams can only overlap)."""
+    g = OverlapGroup(
+        "g",
+        comps=[matmul_comp(f"m{i}", m, 512, n) for i, (m, n) in enumerate(comps)],
+        comms=[CommOp(f"c{i}", "allgather", b, 8) for i, b in enumerate(comms)])
+    cfgs = [CommConfig(nc=nc, chunk_kb=chunk)] * len(g.comms)
+    r = Simulator(hw).run_group(g, cfgs)
+    assert r.Z >= max(r.X, r.Y) - 1e-9
+    assert r.Z <= r.X + r.Y + 1e-9
+    assert all(x > 0 for x in r.comm_times)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 20), nc=NC, chunk=CHUNK, nt=st.integers(-1000, 10000))
+def test_comm_config_clamp(seed, nc, chunk, nt):
+    c = CommConfig(nc=nc * 7, chunk_kb=chunk * 3, nt=nt).clamp()
+    assert NC_MIN <= c.nc <= NC_MAX
+    assert C_MIN_KB <= c.chunk_kb <= C_MAX_KB
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000),
+       comm_bytes=st.lists(st.floats(1e6, 1e9), min_size=1, max_size=3))
+def test_tuner_always_terminates(seed, comm_bytes):
+    from repro.core import tuner
+    g = OverlapGroup(
+        "g", comps=[matmul_comp("m", 4096, 2048, 8192)],
+        comms=[CommOp(f"c{i}", "allgather", b, 8)
+               for i, b in enumerate(comm_bytes)])
+    sim = Simulator(A40_NVLINK, noise=0.01, seed=seed)
+    res = tuner.tune_group(sim, g)
+    assert len(res.configs) == len(comm_bytes)
+    assert all(c.done for c in res.configs)
+    # linear: bounded profiles per communication (dials have log-range steps
+    # x 3 candidates + subspace probes + bisection)
+    assert res.iterations <= 160 * len(comm_bytes)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), step=st.integers(0, 50))
+def test_data_pipeline_deterministic_and_sharded(seed, step):
+    dc = DataConfig(vocab_size=512, seq_len=32, global_batch=8, seed=seed)
+    full = SyntheticCorpus(dc).batch(step)
+    sharded = [SyntheticCorpus(dc, shard=i, num_shards=2).batch(step)
+               for i in range(2)]
+    again = SyntheticCorpus(dc).batch(step)
+    assert np.array_equal(full["tokens"], again["tokens"])        # deterministic
+    assert all(s["tokens"].shape == (4, 32) for s in sharded)
+    assert full["tokens"].max() < 512
+    # targets are next tokens of the same stream
+    assert full["tokens"].dtype == np.int32

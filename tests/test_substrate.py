@@ -1,0 +1,94 @@
+"""Substrate: optimizer, schedules, checkpointing, trainer, serving engine."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models import model as M
+from repro.optim import adamw, schedules
+from repro.serving.engine import Engine
+from repro.train import checkpoint
+from repro.train.trainer import TrainConfig, make_train_step, train_loop
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw.init_state(params)
+    cfg = adamw.AdamWConfig(lr=0.2, weight_decay=0.0)
+    for _ in range(120):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - 1.0) ** 2))(params)
+        params, state, _ = adamw.apply_updates(params, grads, state, cfg)
+    assert jnp.abs(params["w"] - 1.0).max() < 0.05
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init_state(params)
+    cfg = adamw.AdamWConfig(clip_norm=1.0)
+    _, _, m = adamw.apply_updates(params, {"w": jnp.ones(3) * 1e6}, state, cfg)
+    assert float(m["grad_norm"]) > 1e5      # reported pre-clip
+
+
+def test_schedule_shapes():
+    s = schedules.warmup_cosine(jnp.arange(0, 1000, 100), warmup=100, total=1000)
+    assert float(s[0]) == 0.0
+    assert float(s.max()) <= 1.0
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, tree, step=7)
+        restored, step = checkpoint.restore(d, tree)
+        assert step == 7
+        assert np.array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+        checkpoint.save(d, tree, step=8)
+        checkpoint.save(d, tree, step=9)
+        _, step = checkpoint.restore(d, tree)
+        assert step == 9
+
+
+def test_training_reduces_loss():
+    cfg = get_smoke_config("stablelm-3b")
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
+    tcfg = TrainConfig(warmup=3, total_steps=25)
+    _, hist = train_loop(cfg, tcfg, iter(SyntheticCorpus(dc)), steps=25,
+                         log_every=0)
+    assert np.mean(hist["loss"][-5:]) < np.mean(hist["loss"][:5]) - 0.2
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, rng)
+    opt = adamw.init_state(params)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    batch = {k: jnp.asarray(v) for k, v in SyntheticCorpus(dc).batch(0).items()}
+    s1 = jax.jit(make_train_step(cfg, TrainConfig(warmup=1, total_steps=10)))
+    s2 = jax.jit(make_train_step(cfg, TrainConfig(warmup=1, total_steps=10,
+                                                  grad_accum=2)))
+    p1, _, m1 = s1(params, opt, batch, jnp.asarray(0))
+    p2, _, m2 = s2(params, opt, batch, jnp.asarray(0))
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-2
+    d = jax.tree.reduce(lambda a, b: max(a, float(jnp.abs(b).max())),
+                        jax.tree.map(lambda x, y: x - y, p1, p2), 0.0)
+    assert d < 5e-3     # same update up to microbatch loss-normalization noise
+
+
+def test_engine_generate_and_probe():
+    cfg = get_smoke_config("stablelm-3b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, batch_size=2, max_seq=48)
+    prompts = [np.array([1, 2, 3], np.int32), np.array([4, 5, 6], np.int32)]
+    outs = eng.generate(prompts, max_new=4)
+    assert len(outs) == 2 and all(len(o) == 4 for o in outs)
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+    # greedy decode is deterministic
+    outs2 = eng.generate(prompts, max_new=4)
+    assert outs == outs2
