@@ -23,11 +23,11 @@ def run():
     for pname, g in (("pattern1", p1), ("pattern2", p2)):
         sim = Simulator(hw, noise=0.01, seed=0)
         base_cfg = list(nccl_defaults(wl, hw).values())[:len(g.comms)]
-        base = sim.run_group(g, base_cfg)
+        base = sim.profile_group(g, base_cfg)       # batched-engine API
         lag = tuner.tune_group(sim, g)
-        lag_m = sim.run_group(g, lag.configs)
+        lag_m = sim.profile_group(g, lag.configs)
         ac_cfgs, _ = autoccl.tune_group(Simulator(hw, noise=0.01, seed=1), g)
-        ac_m = sim.run_group(g, ac_cfgs)
+        ac_m = sim.profile_group(g, ac_cfgs)
         for strat, m, cfgs in (("nccl", base, base_cfg), ("autoccl", ac_m, ac_cfgs),
                                ("lagom", lag_m, lag.configs)):
             c0 = cfgs[0]

@@ -21,13 +21,16 @@ def run():
     sim = Simulator(hw)
     g = _group()
     base_cfgs = [CommConfig(nc=2, chunk_kb=512), CommConfig(nc=2, chunk_kb=512)]
-    base = sim.run_group(g, base_cfgs)
+    base = sim.profile_group(g, base_cfgs)
     rows = []
     for j, name in enumerate(("commB", "commA")):
+        # the NC sweep is embarrassingly parallel: one batched engine call
+        sweep = []
         for nc in (2, 4, 8, 16):
             cfgs = list(base_cfgs)
             cfgs[j] = CommConfig(nc=nc, chunk_kb=512)
-            m = sim.run_group(g, cfgs)
+            sweep.append(cfgs)
+        for nc, m in zip((2, 4, 8, 16), sim.profile_many(g, sweep)):
             h = metric_h(base.Y, m.Y, base.comm_times[j], m.comm_times[j])
             rows.append(dict(table="fig5", comm=name, nc=nc,
                              comp_ms=m.Y * 1e3, comm_ms=m.comm_times[j] * 1e3,

@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
 MODULES = ["contention_sweep", "priority_demo", "end_to_end", "breakdown",
-           "convergence", "roofline"]
+           "convergence", "roofline", "tuning_throughput"]
 
 
 def _write_csv(name, rows):
@@ -44,7 +44,7 @@ def main(argv=None) -> None:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         kw = {}
-        if name == "end_to_end" and args.fast:
+        if name in ("end_to_end", "tuning_throughput") and args.fast:
             kw["fast"] = True
         rows = mod.run(**kw)
         _write_csv(name, rows)

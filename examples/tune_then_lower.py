@@ -29,8 +29,8 @@ rt = runtime_plan(wl, cfgs)
 print("tuned runtime plan:", {k: (v.strategy, v.num_chunks) for k, v in rt.items()})
 
 a2a = rt.get("a2a")
-mesh = jax.make_mesh((8,), ("model",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("model",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 16, 64))
 
 y = chunked_all_to_all(x, mesh, axis="model", split_axis=1, concat_axis=0,

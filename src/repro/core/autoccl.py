@@ -7,6 +7,14 @@ parameters, oblivious to the computation it overlaps with.  In
 communication-bound overlaps this is near-optimal; in computation-bound
 overlaps it over-allocates resources (e.g. NC=61 in the paper's Fig. 8)
 and can land below the NCCL default (0.87×).
+
+ProfileTime goes through ``Simulator.profile_group`` and therefore the
+batched engine's caches (core.profiling): coordinate descent revisits
+configs when a shrink/grow cycle stalls, and structurally identical layers
+repeat whole search trajectories, so AutoCCL never re-measures an
+already-profiled point.  Its inner loop stays sequential by necessity —
+each candidate's acceptance mutates the descent state (and the shared
+budget) that the next candidate derives from.
 """
 from __future__ import annotations
 

@@ -35,15 +35,20 @@ class CommConfig:
     done: bool = False   # Algorithm 2 termination flag
 
     def clamp(self) -> "CommConfig":
-        return replace(
-            self,
-            nc=max(NC_MIN, min(NC_MAX, int(round(self.nc)))),
-            nt=max(NT_MIN, min(NT_MAX, int(round(self.nt)))),
-            chunk_kb=max(C_MIN_KB, min(C_MAX_KB, int(round(self.chunk_kb)))),
-        )
+        return self.with_()         # with_ applies the dial bounds
 
     def with_(self, **kw) -> "CommConfig":
-        return replace(self, **kw).clamp()
+        # fused replace+clamp: one construction instead of two (this runs
+        # once per candidate dial in the tuner hot loop)
+        d = dict(self.__dict__)
+        d.update(kw)
+        for f, lo, hi in (("nc", NC_MIN, NC_MAX), ("nt", NT_MIN, NT_MAX),
+                          ("chunk_kb", C_MIN_KB, C_MAX_KB)):
+            v = d[f]
+            if type(v) is not int:
+                v = int(round(v))
+            d[f] = lo if v < lo else hi if v > hi else v
+        return CommConfig(**d)
 
 
 def min_config(base: "CommConfig | None" = None) -> CommConfig:

@@ -19,6 +19,8 @@ from __future__ import annotations
 import math
 from typing import Optional
 
+import numpy as np
+
 from repro.core.comm_params import CommConfig
 from repro.core.hardware import Hardware
 from repro.core.workload import CommOp, CompOp
@@ -117,3 +119,79 @@ def comp_time(op: CompOp, cfg: Optional[CommConfig], hw: Hardware) -> float:
 
 def comp_time_alone(op: CompOp, hw: Hardware) -> float:
     return comp_time(op, None, hw)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (batched) variants — the profiling engine's math kernel.
+#
+# These reproduce the scalar functions above BIT-FOR-BIT: every expression
+# keeps the identical operator order/associativity on float64, so a batched
+# profile equals the sequential event loop exactly (tests/test_profiling.py
+# asserts `==`, not approx).  Array arguments broadcast; scalars come from
+# the same Hardware dataclass.  Algorithm-dependent integer constants
+# (wire-bytes factor, ring/tree step counts) are precomputed per-op with the
+# scalar helpers and passed in, so no transcendental function is re-derived
+# here.
+# ---------------------------------------------------------------------------
+
+PROTO_PARAMS = _PROTO            # public aliases for the batched engine
+TRANSPORT_MULT = _TRANSPORT
+NC_HALF = _NC_HALF
+
+
+def comm_steps(op: CommOp, algorithm: str) -> int:
+    """Step count of ``comm_time``'s latency term, factored out so the
+    batched engine can precompute it with the identical expression."""
+    if algorithm == "ring":
+        return max(2, op.group_size) - 1
+    return max(1, int(math.log2(max(2, op.group_size))))
+
+
+def wire_bandwidth_v(nc, chunk_kb, proto_ceiling, transport_mult, hw: Hardware):
+    """Vectorized ``wire_bandwidth`` (proto/transport constants pre-gathered)."""
+    nc_curve = nc / (nc + _NC_HALF)
+    eff = proto_ceiling * chunk_kb / (chunk_kb + hw.chunk_half_kb)
+    bw = hw.link_bw * nc_curve * eff * transport_mult
+    return np.minimum(bw, hw.chan_bw * nc)
+
+
+def comm_bandwidth_draw_v(nc, chunk_kb, proto_ceiling, transport_mult,
+                          hw: Hardware):
+    """Vectorized ``comm_bandwidth_draw``; nc == 0 yields exactly 0.0 (the
+    scalar ``cfg is None`` branch), which lets the engine pad a no-comm
+    column instead of special-casing it."""
+    wire = wire_bandwidth_v(nc, chunk_kb, proto_ceiling, transport_mult, hw)
+    return np.minimum(2.0 * wire * (1.0 + 0.01 * nc), 0.85 * hw.hbm_bw)
+
+
+def comm_time_v(op_bytes, wb, n_steps, nc, nt, chunk_kb, proto_ceiling,
+                proto_chunk_mult, transport_mult, hw: Hardware, *,
+                compute_active):
+    """Vectorized ``comm_time``.  ``wb`` / ``n_steps`` are the per-(op, algo)
+    constants from ``wire_bytes`` / ``comm_steps``; ``compute_active`` may be
+    a bool or a boolean array."""
+    bw = wire_bandwidth_v(nc, chunk_kb, proto_ceiling, transport_mult, hw)
+    bw = np.where(compute_active, bw * (1.0 - hw.comm_comp_beta), bw)
+    n_chunks = np.maximum(1, np.ceil(op_bytes / (chunk_kb * 1024)))
+    nt_adj = 1.0 - 0.004 * (nt - 64) / 576.0
+    latency = (hw.launch_us + 0.5 * nc
+               + n_chunks * hw.chunk_us * proto_chunk_mult * nt_adj
+               + n_steps * 1.0) * 1e-6
+    return latency + wb / bw
+
+
+def comp_time_v(theta_base, threadblocks, tb_per_slot, bytes_per_tb,
+                nc, chunk_kb, V, hw: Hardware):
+    """Vectorized ``comp_time``.  ``theta_base`` is the per-op pure-compute
+    wave time ``(flops/μ)·TB·λ/achieved`` precomputed with scalar float
+    arithmetic; nc == chunk_kb == V == 0 reproduces ``comp_time_alone``
+    exactly (footprint multiplier collapses to 1.0, Eq. 6 denominator to B̄)."""
+    lam = hw.num_slots
+    nc_cl = np.minimum(nc, int(lam * 0.75))
+    W = np.maximum(1, (lam - nc_cl) * tb_per_slot)
+    g = np.ceil(threadblocks / W)
+    footprint = nc * chunk_kb / hw.cache_kb
+    theta = theta_base * (1.0 + hw.interference_gamma
+                          * np.minimum(1.0, footprint))
+    mem = W * bytes_per_tb / np.maximum(hw.hbm_bw - V, 0.05 * hw.hbm_bw)
+    return g * (theta + mem)

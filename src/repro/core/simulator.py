@@ -49,13 +49,33 @@ class Measurement:
 
 
 class Simulator:
-    def __init__(self, hw: Hardware, *, noise: float = 0.0, seed: int = 0):
+    """ProfileTime oracle.  ``batched=True`` (default) routes measurements
+    through the vectorized + cached ``profiling.BatchSimulator`` engine;
+    ``batched=False`` keeps every call on the pure-Python event loop below
+    (the reference path, used by equivalence tests and the
+    ``benchmarks/tuning_throughput.py`` baseline).  Both paths are
+    numerically identical — including the noise RNG stream."""
+
+    def __init__(self, hw: Hardware, *, noise: float = 0.0, seed: int = 0,
+                 batched: bool = True, cache_size: int = 131072):
         self.hw = hw
         self.noise = noise
         self._rng = np.random.default_rng(seed)
         self.profile_count = 0     # tuning-efficiency accounting (Fig. 8c)
+        self.batched = batched
+        self._cache_size = cache_size
+        self._engine = None
 
-    # -- single overlap group --------------------------------------------
+    @property
+    def engine(self):
+        """The batched profiling engine (created lazily; import here avoids
+        a simulator <-> profiling cycle)."""
+        if self._engine is None:
+            from repro.core.profiling import BatchSimulator
+            self._engine = BatchSimulator(self, cache_size=self._cache_size)
+        return self._engine
+
+    # -- single overlap group (sequential reference path) ----------------
     def run_group(self, g: OverlapGroup, cfgs: List[CommConfig]) -> GroupMeasurement:
         assert len(cfgs) == len(g.comms)
         hw = self.hw
@@ -116,9 +136,22 @@ class Simulator:
         gms = []
         for gi, g in enumerate(wl.groups):
             cfgs = [configs[(gi, ci)] for ci in range(len(g.comms))]
-            gms.append(self.run_group(g, cfgs))
+            gms.append(self.engine.measure_one(g, cfgs) if self.batched
+                       else self.run_group(g, cfgs))
         return Measurement(Z=sum(g.Z for g in gms), groups=gms)
 
     def profile_group(self, g: OverlapGroup, cfgs: List[CommConfig]) -> GroupMeasurement:
         self.profile_count += 1
+        if self.batched:
+            return self.engine.measure_one(g, cfgs)
         return self.run_group(g, cfgs)
+
+    def profile_many(self, g: OverlapGroup,
+                     cfg_lists: List[List[CommConfig]]) -> List[GroupMeasurement]:
+        """Batched ProfileTime: one logical invocation per candidate (the
+        Fig. 8c counter sees exactly what a loop of ``profile_group`` calls
+        would), evaluated in a single vectorized pass."""
+        self.profile_count += len(cfg_lists)
+        if self.batched:
+            return self.engine.measure_many(g, cfg_lists)
+        return [self.run_group(g, cfgs) for cfgs in cfg_lists]

@@ -8,15 +8,25 @@ relative improvement ``(x_prev − x_new) / x_new ≥ 0`` and apply it as a
 multiplicative step on NC/NT/C (integer dials move by at least 1).  The
 complexity remains linear in the number of communications: each comm takes
 O(log(range)) growth steps and comms are tuned one-at-a-time by priority.
+
+ProfileTime plumbing: the independent measurements of one tuning step — the
+four subspace probes and the per-dial growth candidates — go through
+``Simulator.profile_many`` so the batched engine (core.profiling) evaluates
+them in one pass; sequentially dependent steps (bisection refinement, the
+post-probe re-measure) stay on ``profile_group``.  Both routes are
+numerically identical to the seed's per-call event loop, including the
+noise RNG stream, and ``profile_count`` still counts logical invocations.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import priority
-from repro.core.comm_params import CommConfig, min_config
+from repro.core.comm_params import (C_MAX_KB, C_MIN_KB, NC_MAX, NC_MIN,
+                                    NT_MAX, CommConfig, min_config)
 from repro.core.simulator import Simulator
 from repro.core.workload import ConfigSet, OverlapGroup, Workload
 
@@ -42,25 +52,30 @@ def _grow_candidates(cfg: CommConfig, lr: float, *, shrink: bool = False):
     NC=2, C=684 KB where NCCL defaults NC=8, C=2 MB).
 
     ``shrink=True`` (warm-start mode, beyond-paper): also propose shrinking
-    the contention dials, so a seed past the balance point can descend."""
+    the contention dials, so a seed past the balance point can descend.
+
+    Hot path: one positional ``CommConfig`` per stepped dial (``with_``'s
+    dict merge costs ~3x as much and this runs for every tuning step)."""
     lr = max(0.25, min(1.0, lr))
+    a, p, tr, done = cfg.algorithm, cfg.protocol, cfg.transport, cfg.done
+    nc, nt, ck = cfg.nc, cfg.nt, cfg.chunk_kb
     cands = []
-    c2 = cfg.with_(chunk_kb=max(int(cfg.chunk_kb * 2), int(cfg.chunk_kb * (1 + lr))))
-    if c2 != cfg:
-        cands.append(("chunk", c2))
-    n2 = cfg.with_(nc=max(cfg.nc + 1, int(round(cfg.nc * (1 + lr)))))
-    if n2 != cfg:
-        cands.append(("nc", n2))
-    t2 = cfg.with_(nt=max(cfg.nt + 64, int(round(cfg.nt * (1 + lr)))))
-    if t2 != cfg:
-        cands.append(("nt", t2))
+    c2 = min(C_MAX_KB, max(int(ck * 2), int(ck * (1 + lr))))
+    if c2 != ck:
+        cands.append(("chunk", CommConfig(a, p, tr, nc, nt, c2, done)))
+    n2 = min(NC_MAX, max(nc + 1, int(round(nc * (1 + lr)))))
+    if n2 != nc:
+        cands.append(("nc", CommConfig(a, p, tr, n2, nt, ck, done)))
+    t2 = min(NT_MAX, max(nt + 64, int(round(nt * (1 + lr)))))
+    if t2 != nt:
+        cands.append(("nt", CommConfig(a, p, tr, nc, t2, ck, done)))
     if shrink:
-        n3 = cfg.with_(nc=max(1, cfg.nc - max(1, cfg.nc // 3)))
-        if n3 != cfg:
-            cands.append(("nc-", n3))
-        c3 = cfg.with_(chunk_kb=max(32, cfg.chunk_kb // 2))
-        if c3 != cfg:
-            cands.append(("chunk-", c3))
+        n3 = max(NC_MIN, nc - max(1, nc // 3))
+        if n3 != nc:
+            cands.append(("nc-", CommConfig(a, p, tr, n3, nt, ck, done)))
+        c3 = max(C_MIN_KB, ck // 2)
+        if c3 != ck:
+            cands.append(("chunk-", CommConfig(a, p, tr, nc, nt, c3, done)))
     return cands
 
 
@@ -116,18 +131,19 @@ def tune_group(sim: Simulator, group: OverlapGroup, *,
         states = [_CommState(cfg=min_config(base)) for _ in range(n)]
     trace: List[Dict] = []
     start_profiles = sim.profile_count
-
-    def profile(cfgs):
-        return sim.profile_group(group, cfgs)
+    profile = partial(sim.profile_group, group)
+    profile_batch = partial(sim.profile_many, group)
 
     # Alg 1 line 3: while ∃ s not done
     steps = 0
     prev_meas = None
     while any(not s.done for s in states) and steps < max_steps:
         steps += 1
-        # line 4: argmin H among unfinished
-        j = min((i for i in range(n) if not states[i].done),
-                key=lambda i: states[i].h)
+        # line 4: argmin H among unfinished (first minimum wins, like min())
+        j = -1
+        for i in range(n):
+            if not states[i].done and (j < 0 or states[i].h < states[j].h):
+                j = i
         st = states[j]
 
         # ---- Algorithm 2 for communication j -----------------------------
@@ -136,16 +152,19 @@ def tune_group(sim: Simulator, group: OverlapGroup, *,
             # divide-and-conquer subspace pick (the AutoCCL framework Lagom
             # plugs into, Sec. 3.2): probe implementation-related params at a
             # mid-resource point, keep the best, then restart from minimum.
-            best_sub, best_x = None, math.inf
-            for algo, proto in (("ring", "mixed"), ("ring", "bulk"),
-                                ("tree", "mixed"), ("bidir", "bulk")):
+            subs = (("ring", "mixed"), ("ring", "bulk"),
+                    ("tree", "mixed"), ("bidir", "bulk"))
+            probe_lists = []
+            for algo, proto in subs:
                 probe = st.cfg.with_(algorithm=algo, protocol=proto,
                                      nc=4, chunk_kb=1024)
                 cfgs = [states[i].cfg for i in range(n)]
                 cfgs[j] = probe
-                xm = profile(cfgs).comm_times[j]
-                if xm < best_x:
-                    best_sub, best_x = (algo, proto), xm
+                probe_lists.append(cfgs)
+            best_sub, best_x = None, math.inf
+            for (algo, proto), m in zip(subs, profile_batch(probe_lists)):
+                if m.comm_times[j] < best_x:
+                    best_sub, best_x = (algo, proto), m.comm_times[j]
             if warm_start:   # keep the cost-model seed, adopt the subspace
                 st.cfg = st.cfg.with_(algorithm=best_sub[0], protocol=best_sub[1])
             else:            # paper-faithful: restart from the minimum
@@ -162,10 +181,13 @@ def tune_group(sim: Simulator, group: OverlapGroup, *,
                 st.cfg = st.cfg.with_(done=True)
                 continue
             cfgs = [states[i].cfg for i in range(n)]
-            best = None
-            for _, c in cands:                      # step the best dial
-                cfgs[j] = c
-                m = profile(cfgs)
+            cand_lists = []
+            for _, c in cands:
+                l = list(cfgs)
+                l[j] = c
+                cand_lists.append(l)
+            best = None                             # step the best dial
+            for (_, c), m in zip(cands, profile_batch(cand_lists)):
                 if best is None or m.Z < best[1].Z:
                     best = (c, m)
             cand, meas = best

@@ -25,7 +25,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, get_config, shape_applicable
-from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.mesh import make_mesh, make_production_mesh, mesh_axes
 from repro.launch.specs import decode_input_specs, input_specs, param_specs_shapes
 from repro.models import model as M
 from repro.optim import adamw
@@ -92,8 +92,7 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         # activation all-reduce volume against parameter-gather volume.
         t = int(sharding[len("hybrid"):])
         assert not multi_pod, "perf variants are single-pod"
-        mesh = jax.make_mesh((16, 16 // t, t), ("data", "extra", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((16, 16 // t, t), ("data", "extra", "model"))
         dp_axes, tp_axis = ("data", "extra"), "model"
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)

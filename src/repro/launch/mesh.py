@@ -12,11 +12,19 @@ from typing import Tuple
 import jax
 
 
+def make_mesh(shape, axes):
+    """Version-compat ``jax.make_mesh``: jax >= 0.5 wants explicit
+    axis_types; older jax has no AxisType at all."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:
@@ -29,5 +37,4 @@ def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for unit tests (run under a host-device-count subprocess)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

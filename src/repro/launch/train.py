@@ -69,8 +69,8 @@ def main(argv=None):
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split("x"))
         axes = ("data", "model")[:len(shape)]
-        mesh = jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(shape, axes)
         jax.sharding.set_mesh(mesh)
         rng = jax.random.PRNGKey(0)
         with CT.use_axes(("data",), "model"):

@@ -28,7 +28,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:                                  # jax >= 0.5 exports it at top level
+    from jax import shard_map
+except ImportError:                   # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
+
+def axis_size(axis: str) -> int:
+    """Concrete mesh-axis size inside a shard_map body (``lax.axis_size`` on
+    new jax; on older jax ``psum(1, axis)`` folds to a static int)."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)
 
 
 @dataclass(frozen=True)
@@ -52,7 +64,7 @@ def _ring_ag_matmul_local(x, w, *, axis: str, num_chunks: int):
     """Per-device body: hold one sequence shard, rotate shards around the
     ring; each step multiplies the currently-held shard so communication of
     the next shard overlaps with this step's matmul."""
-    n = lax.axis_size(axis)
+    n = axis_size(axis)
     idx = lax.axis_index(axis)
     Tl = x.shape[-2]
     out_shape = x.shape[:-2] + (n * Tl, w.shape[-1])
@@ -103,7 +115,7 @@ def mm_rs_ref(x, w):
 
 
 def _mm_rs_local(x, w, *, axis: str, num_chunks: int):
-    n = lax.axis_size(axis)
+    n = axis_size(axis)
     T = x.shape[-2]
     if num_chunks <= 1 or T % (num_chunks * n):
         y = x @ w

@@ -14,8 +14,10 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.collectives import axis_size, shard_map
 
 
 def _pipeline_local(params, x_mb, *, fn: Callable, axis: str, microbatches: int):
@@ -23,7 +25,7 @@ def _pipeline_local(params, x_mb, *, fn: Callable, axis: str, microbatches: int)
     squeezed by shard_map).  x_mb: (M, mb, ...) microbatched input
     (replicated).  Returns (M, mb, ...) outputs (only the last stage's
     contribution is non-zero; caller psums over the stage axis)."""
-    n = lax.axis_size(axis)
+    n = axis_size(axis)
     stage = lax.axis_index(axis)
     M = microbatches
     params = jax.tree.map(lambda a: a[0], params)       # drop stage dim

@@ -8,6 +8,11 @@ import pytest
 from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_smoke_config
 from repro.models import model as M
 
+# Every test here XLA-compiles a full (reduced) model — 3-12s per arch x
+# step kind.  That is the slow tier by construction; the CI fast lane keeps
+# model coverage through test_substrate's end-to-end training tests.
+pytestmark = pytest.mark.slow
+
 RNG = jax.random.PRNGKey(0)
 
 

@@ -1,0 +1,242 @@
+"""Batched profiling engine: batched measurements must equal the sequential
+event loop EXACTLY (``==``, not approx) in noise-free mode, reproduce the
+identical RNG stream in noisy mode, and cache hits must never change what
+the tuners decide."""
+import numpy as np
+import pytest
+
+from repro.core import (A40_NVLINK, A40_PCIE, TPU_V5E, CommConfig,
+                        ParallelPlan, Simulator, extract_workload)
+from repro.core import autoccl, contention, tuner
+from repro.core.profiling import BatchSimulator, ProfileCache, group_fingerprint
+from repro.core.workload import CommOp, OverlapGroup, matmul_comp
+
+HWS = (A40_NVLINK, A40_PCIE, TPU_V5E)
+KINDS = ("allgather", "allreduce", "reducescatter", "alltoall", "permute")
+
+
+def _rand_cfg(rng):
+    return CommConfig(
+        algorithm=("ring", "tree", "bidir")[int(rng.integers(0, 3))],
+        protocol=("latency", "mixed", "bulk")[int(rng.integers(0, 3))],
+        transport=("p2p", "shm", "net")[int(rng.integers(0, 3))],
+        nc=int(rng.integers(1, 64)), nt=int(rng.integers(64, 640)),
+        chunk_kb=int(rng.integers(32, 8192)))
+
+
+def _rand_group(rng, max_comps=5, max_comms=4):
+    M = int(rng.integers(0, max_comps))
+    N = int(rng.integers(0, max_comms))
+    return OverlapGroup(
+        "g",
+        comps=[matmul_comp(f"m{i}", int(rng.integers(64, 4096)), 512,
+                           int(rng.integers(64, 4096))) for i in range(M)],
+        comms=[CommOp(f"c{i}", KINDS[int(rng.integers(0, len(KINDS)))],
+                      float(rng.uniform(1e5, 1e9)), int(rng.integers(2, 64)))
+               for i in range(N)])
+
+
+def _same(a, b):
+    return (a.Z == b.Z and a.X == b.X and a.Y == b.Y
+            and list(a.comm_times) == list(b.comm_times)
+            and list(a.comp_times) == list(b.comp_times))
+
+
+def test_batched_equals_sequential_exact():
+    rng = np.random.default_rng(0)
+    for trial in range(60):
+        hw = HWS[trial % 3]
+        g = _rand_group(rng)
+        lists = [[_rand_cfg(rng) for _ in g.comms]
+                 for _ in range(int(rng.integers(1, 6)))]
+        sim = Simulator(hw)
+        seq = [sim.run_group(g, l) for l in lists]
+        bat = sim.engine.measure_many(g, lists)
+        assert all(_same(s, b) for s, b in zip(seq, bat))
+
+
+def test_lockstep_large_batch_equals_sequential_exact():
+    rng = np.random.default_rng(1)
+    g = OverlapGroup(
+        "g", comps=[matmul_comp(f"m{i}", 1024, 512, 2048) for i in range(3)],
+        comms=[CommOp(f"c{i}", "allgather", 3e7, 8) for i in range(2)])
+    lists = [[_rand_cfg(rng) for _ in g.comms] for _ in range(40)]
+    sim = Simulator(A40_NVLINK)
+    assert len(lists) >= sim.engine._VECTOR_MIN
+    seq = [sim.run_group(g, l) for l in lists]
+    bat = sim.engine.measure_many(g, lists)
+    assert all(_same(s, b) for s, b in zip(seq, bat))
+
+
+def test_noisy_mode_reproduces_sequential_rng_stream():
+    rng = np.random.default_rng(2)
+    for trial in range(20):
+        g = _rand_group(rng, max_comps=4, max_comms=3)
+        lists = [[_rand_cfg(rng) for _ in g.comms] for _ in range(3)]
+        s_seq = Simulator(A40_NVLINK, noise=0.02, seed=trial, batched=False)
+        s_bat = Simulator(A40_NVLINK, noise=0.02, seed=trial)
+        seq = [s_seq.profile_group(g, l) for l in lists]
+        bat = s_bat.profile_many(g, lists)
+        assert all(_same(s, b) for s, b in zip(seq, bat))
+        assert s_seq.profile_count == s_bat.profile_count == 3
+
+
+def test_noisy_lockstep_large_batch_reproduces_rng_stream():
+    """The lock-step array path must consume the RNG candidate-by-candidate
+    exactly like a sequence of run_group calls (big noisy batch)."""
+    rng = np.random.default_rng(5)
+    g = OverlapGroup(
+        "g", comps=[matmul_comp(f"m{i}", 1024, 512, 2048) for i in range(3)],
+        comms=[CommOp(f"c{i}", "allgather", 3e7, 8) for i in range(2)])
+    lists = [[_rand_cfg(rng) for _ in g.comms] for _ in range(24)]
+    s_seq = Simulator(A40_NVLINK, noise=0.02, seed=9, batched=False)
+    s_bat = Simulator(A40_NVLINK, noise=0.02, seed=9)
+    assert len(lists) >= s_bat.engine._VECTOR_MIN
+    seq = [s_seq.profile_group(g, l) for l in lists]
+    bat = s_bat.profile_many(g, lists)
+    assert all(_same(s, b) for s, b in zip(seq, bat))
+
+
+def test_vectorized_contention_kernels_match_scalar():
+    rng = np.random.default_rng(3)
+    op = CommOp("c", "allreduce", 5e7, 16)
+    comp = matmul_comp("m", 2048, 1024, 4096)
+    for hw in HWS:
+        for _ in range(50):
+            cfg = _rand_cfg(rng)
+            ceil_, cmult = contention.PROTO_PARAMS[cfg.protocol]
+            tmult = contention.TRANSPORT_MULT[cfg.transport]
+            wb = contention.wire_bytes(op, cfg.algorithm)
+            ns = contention.comm_steps(op, cfg.algorithm)
+            for active in (False, True):
+                got = contention.comm_time_v(
+                    op.bytes, wb, ns, cfg.nc, cfg.nt, cfg.chunk_kb,
+                    ceil_, cmult, tmult, hw, compute_active=active)
+                want = contention.comm_time(op, cfg, hw, compute_active=active)
+                assert float(got) == want
+            V = contention.comm_bandwidth_draw(cfg, hw)
+            assert float(contention.comm_bandwidth_draw_v(
+                cfg.nc, cfg.chunk_kb, ceil_, tmult, hw)) == V
+            lam = hw.num_slots
+            theta_base = (comp.flops / comp.threadblocks * comp.tb_per_slot
+                          * lam / hw.achieved_flops)
+            got = contention.comp_time_v(
+                theta_base, comp.threadblocks, comp.tb_per_slot,
+                comp.bytes_per_tb, cfg.nc, cfg.chunk_kb, V, hw)
+            assert float(got) == contention.comp_time(comp, cfg, hw)
+            got0 = contention.comp_time_v(
+                theta_base, comp.threadblocks, comp.tb_per_slot,
+                comp.bytes_per_tb, 0, 0, 0.0, hw)
+            assert float(got0) == contention.comp_time_alone(comp, hw)
+
+
+def _small_workload(layers=3):
+    from repro.configs import get_config
+    return extract_workload(get_config("phi2-2b"),
+                            ParallelPlan(kind="fsdp", dp=8),
+                            seq=2048, global_batch=16, layers=layers)
+
+
+@pytest.mark.parametrize("noise", [0.0, 0.01])
+def test_tuner_trajectory_identical_batched_vs_sequential(noise):
+    wl = _small_workload()
+    s_seq = Simulator(A40_NVLINK, noise=noise, seed=0, batched=False)
+    s_bat = Simulator(A40_NVLINK, noise=noise, seed=0)
+    c1, i1, t1 = tuner.tune_workload(s_seq, wl)
+    c2, i2, t2 = tuner.tune_workload(s_bat, wl)
+    assert c1 == c2
+    assert i1 == i2
+    assert len(t1) == len(t2)
+    assert all(a["Z"] == b["Z"] and a["cfg"] == b["cfg"]
+               for a, b in zip(t1, t2))
+
+
+def test_autoccl_identical_batched_vs_sequential():
+    wl = _small_workload(layers=2)
+    a1 = autoccl.tune_workload(Simulator(A40_NVLINK, noise=0.01, seed=1,
+                                         batched=False), wl)
+    a2 = autoccl.tune_workload(Simulator(A40_NVLINK, noise=0.01, seed=1), wl)
+    assert a1 == a2
+
+
+def test_cache_hits_do_not_change_tuned_configs():
+    wl = _small_workload()
+    sim = Simulator(A40_NVLINK, seed=0)
+    c1, i1, _ = tuner.tune_workload(sim, wl)
+    hits_before = sim.engine.cache.hits
+    c2, i2, _ = tuner.tune_workload(sim, wl)       # fully warm cache
+    assert c1 == c2
+    assert i1 == i2                                # logical count unchanged
+    assert sim.engine.cache.hits > hits_before
+
+
+def test_structural_sharing_across_identical_layers():
+    """A stack of structurally identical groups shares cache entries: after
+    tuning layer 0, the other layers tune almost entirely from cache."""
+    wl = _small_workload(layers=6)
+    g0, g1 = wl.groups[0], wl.groups[1]
+    assert g0.name != g1.name
+    assert group_fingerprint(g0) == group_fingerprint(g1)
+    sim = Simulator(A40_NVLINK, seed=0)
+    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    eng = sim.engine
+    assert eng.cache.hits > eng.cache.misses       # cross-layer reuse dominates
+    n0 = len(wl.groups[0].comms)
+    assert all(cfgs[(0, ci)] == cfgs[(1, ci)] for ci in range(n0))
+
+
+def test_cache_key_ignores_done_flag():
+    g = OverlapGroup("g", comps=[matmul_comp("m", 1024, 512, 2048)],
+                     comms=[CommOp("c", "allgather", 3e7, 8)])
+    sim = Simulator(A40_NVLINK)
+    cfg = CommConfig(nc=4, chunk_kb=512)
+    m1 = sim.profile_group(g, [cfg])
+    misses = sim.engine.cache.misses
+    m2 = sim.profile_group(g, [cfg.with_(done=True)])
+    assert sim.engine.cache.misses == misses       # hit despite done=True
+    assert _same(m1, m2)
+
+
+def test_noisy_mode_bypasses_measurement_cache():
+    g = OverlapGroup("g", comps=[matmul_comp("m", 1024, 512, 2048)],
+                     comms=[CommOp("c", "allgather", 3e7, 8)])
+    sim = Simulator(A40_NVLINK, noise=0.05, seed=0)
+    cfg = CommConfig(nc=4, chunk_kb=512)
+    m1 = sim.profile_group(g, [cfg])
+    m2 = sim.profile_group(g, [cfg])
+    assert len(sim.engine.cache) == 0              # never filled
+    assert m1.Z != m2.Z                            # fresh jitter draw
+
+
+def test_lru_eviction_keeps_results_exact():
+    rng = np.random.default_rng(4)
+    g = OverlapGroup("g", comps=[matmul_comp("m", 1024, 512, 2048)],
+                     comms=[CommOp("c", "allgather", 3e7, 8)])
+    sim = Simulator(A40_NVLINK, cache_size=8)
+    cfgs = [_rand_cfg(rng) for _ in range(30)]
+    first = [sim.profile_group(g, [c]) for c in cfgs]
+    assert len(sim.engine.cache) <= 8
+    again = [sim.profile_group(g, [c]) for c in cfgs]
+    assert all(_same(a, b) for a, b in zip(first, again))
+
+
+def test_profile_cache_lru_order():
+    c = ProfileCache(maxsize=2)
+    c.put(("a",), 1)
+    c.put(("b",), 2)
+    assert c.get(("a",)) == 1                      # refreshes "a"
+    c.put(("c",), 3)                               # evicts "b", not "a"
+    assert c.get(("b",)) is None
+    assert c.get(("a",)) == 1
+    assert c.get(("c",)) == 3
+
+
+def test_profile_many_counts_logical_invocations():
+    g = OverlapGroup("g", comps=[matmul_comp("m", 1024, 512, 2048)],
+                     comms=[CommOp("c", "allgather", 3e7, 8)])
+    sim = Simulator(A40_NVLINK)
+    lists = [[CommConfig(nc=n, chunk_kb=512)] for n in (1, 2, 4, 2, 1)]
+    sim.profile_many(g, lists)
+    assert sim.profile_count == 5                  # hits count as invocations
+    sim.profile_many(g, lists)
+    assert sim.profile_count == 10

@@ -4,6 +4,10 @@ clamping, data-pipeline determinism."""
 import math
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import contention
