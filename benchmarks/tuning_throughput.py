@@ -1,85 +1,210 @@
-"""Tuning-throughput microbenchmark: seconds per ``tune_workload`` call on
-the llama3-8b FSDP workload, batched profiling engine vs the sequential
-event-loop path.  Every repetition uses a fresh Simulator (cold engine, cold
-caches), so the reported batched time includes fingerprinting, cache fills,
-and the vectorized replays — the honest end-to-end cost.  Headline target:
->= 5x fewer seconds per call (ISSUE 1 acceptance)."""
+"""Tuning-throughput microbenchmark — seconds per ``tune_workload`` call.
+
+Two comparisons, every repetition on a fresh Simulator (cold engine, cold
+caches: fingerprinting, cache fills, and the vectorized replays are all
+inside the measured time — the honest end-to-end cost):
+
+  1. **Engine vs event loop** (PR 1's headline, regression guard): the
+     batched profiling engine against the sequential pure-Python event
+     loop on the llama3-8b FSDP workload.  Target: >= 5x.
+  2. **Interleaved vs serial walk** (the cross-group scheduler): one
+     lock-step ``profile_many_grouped`` call per step — with deterministic
+     trajectory sharing across structurally identical groups — against the
+     PR 1 batched path that finishes each group before starting the next.
+     Multi-group workloads: yi-34b pipeline, deepseek-moe-16b EP, llama3-8b
+     FSDP.  Target: >= 2x (noise-free), with configs, traces, and
+     ``profile_count`` byte-identical to the serial walk (asserted here on
+     every run).  Noisy rows are reported too; there trajectory sharing is
+     unsound (independent jitter draws) so the win is call amortization
+     only — parity, not the headline.
+
+Run directly (``python benchmarks/tuning_throughput.py [--fast]``) the
+equality and speedup-floor assertions double as the CI engine-regression
+smoke (the fast lane uses ``--fast``: fewer reps, trimmed workloads, and a
+conservative 1.3x floor on the best multi-group speedup so shared-runner
+jitter cannot flake the lane while a real scheduling regression — which
+sinks every workload at once — still fails it).
+"""
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
 from repro.core import ParallelPlan, Simulator, TPU_V5E, extract_workload
 from repro.core import autoccl, tuner
 
 
-def _time_pair(make_seq, make_bat, call, reps):
-    """Interleaved best-of-reps for both strategies: alternating the two
-    paths rep-by-rep and taking each one's minimum makes the ratio robust
-    to the bursty CPU noise of shared runners (min is the standard
-    microbenchmark estimator — every rep does identical work, so the
-    fastest rep is the least-perturbed one)."""
-    t_seq, t_bat = [], []
-    r_seq = r_bat = None
+def _best_of(make_a, call_a, make_b, call_b, reps):
+    """Interleaved best-of-reps for two (simulator, call) strategies:
+    alternating the paths rep-by-rep and taking each one's minimum makes
+    the ratio robust to the bursty CPU noise of shared runners (min is the
+    standard microbenchmark estimator — every rep does identical work, so
+    the fastest rep is the least-perturbed one)."""
+    t_a, t_b = [], []
+    r_a = r_b = sim_b = None
     for _ in range(reps):
-        sim = make_seq()
+        sim = make_a()
         t0 = time.perf_counter()
-        r_seq = call(sim)
-        t_seq.append(time.perf_counter() - t0)
-        sim = make_bat()
+        r_a = call_a(sim)
+        t_a.append(time.perf_counter() - t0)
+        sim_b = make_b()
         t0 = time.perf_counter()
-        r_bat = call(sim)
-        t_bat.append(time.perf_counter() - t0)
-    return min(t_seq), min(t_bat), r_seq, r_bat
+        r_b = call_b(sim_b)
+        t_b.append(time.perf_counter() - t0)
+    return min(t_a), min(t_b), r_a, r_b, sim_b
+
+
+def _workloads(fast: bool):
+    yi = extract_workload(get_config("yi-34b"),
+                          ParallelPlan(kind="pp", pp=4, microbatches=4),
+                          seq=2048, global_batch=16)
+    ds = extract_workload(get_config("deepseek-moe-16b"),
+                          ParallelPlan(kind="ep", ep=8), seq=2048,
+                          global_batch=16, layers=4 if fast else None)
+    ll = extract_workload(get_config("llama3-8b"),
+                          ParallelPlan(kind="fsdp", dp=8), seq=2048,
+                          global_batch=16, layers=8 if fast else None)
+    return [("yi-34b/pp", yi), ("deepseek-moe-16b/ep", ds),
+            ("llama3-8b/fsdp", ll)]
 
 
 def run(fast: bool = False):
     hw = TPU_V5E
-    cfg = get_config("llama3-8b")
-    wl = extract_workload(cfg, ParallelPlan(kind="fsdp", dp=8), seq=2048,
-                          global_batch=16)
-    reps = 3 if fast else 7
+    reps = 2 if fast else 5
+    floor = 1.3 if fast else 2.0
     rows = []
+    workloads = _workloads(fast)
 
+    # -- 1. engine vs sequential event loop (PR 1 regression guard) -------
+    ll = workloads[2][1]
     for noise in (0.0, 0.01):
-        scenarios = [("lagom", lambda sim: tuner.tune_workload(sim, wl)[:2])]
+        scenarios = [("lagom",
+                      lambda sim: tuner.tune_workload(sim, ll,
+                                                      interleave=False)[:2])]
         if noise:       # AutoCCL samples in-situ, i.e. always with jitter
             scenarios.append(
-                ("autoccl", lambda sim: autoccl.tune_workload(sim, wl)))
+                ("autoccl",
+                 lambda sim: autoccl.tune_workload(sim, ll,
+                                                   interleave=False)))
         for tname, call in scenarios:
-            t_seq, t_bat, r_seq, r_bat = _time_pair(
+            t_seq, t_bat, r_seq, r_bat, _ = _best_of(
                 lambda: Simulator(hw, noise=noise, seed=0, batched=False),
+                call,
                 lambda: Simulator(hw, noise=noise, seed=0),
-                call, reps)
+                call, max(2, reps - 2))
             assert r_seq == r_bat, "batched path changed tuning results"
+            if tname == "lagom" and not noise:
+                assert t_seq / t_bat >= (2.0 if fast else 3.5), \
+                    f"engine speedup regressed to {t_seq / t_bat:.2f}x"
             profiles = r_seq[1]
-            rows.append(dict(table="tuning_throughput", tuner=tname,
-                             noise=noise, profiles=profiles,
-                             seq_s=t_seq, batched_s=t_bat,
+            rows.append(dict(table="engine_vs_event_loop", tuner=tname,
+                             workload="llama3-8b/fsdp", noise=noise,
+                             profiles=profiles, seq_s=t_seq, batched_s=t_bat,
                              seq_us_per_profile=t_seq / profiles * 1e6,
                              batched_us_per_profile=t_bat / profiles * 1e6,
                              speedup=t_seq / t_bat))
+
+    # -- 2. cross-group interleaved scheduler vs serial walk --------------
+    clean_speedups = []
+    for wname, wl in workloads:
+        # small workloads finish in ~ms, where shared-runner jitter is large
+        # relative to the measurement — buy stability with extra reps
+        reps_w = reps * 3 if len(wl.groups) < 20 else reps
+        for noise in (0.0, 0.01):
+            make = lambda: Simulator(hw, noise=noise, seed=0)
+            serial = lambda sim: tuner.tune_workload(sim, wl,
+                                                     interleave=False)
+            inter = lambda sim: tuner.tune_workload(sim, wl)
+            t_ser, t_int, r_ser, r_int, sim_i = _best_of(
+                make, serial, make, inter, reps_w)
+            if not noise:
+                # acceptance: byte-identical configs/traces/profile_count
+                assert r_ser == r_int, \
+                    f"{wname}: interleaved schedule changed tuning results"
+                clean_speedups.append(t_ser / t_int)
+            stats = sim_i.engine.cache_stats()
+            rows.append(dict(table="interleave_vs_serial", tuner="lagom",
+                             workload=wname, noise=noise,
+                             groups=len(wl.groups), profiles=r_int[1],
+                             serial_s=t_ser, interleaved_s=t_int,
+                             speedup=t_ser / t_int,
+                             meas_hits=stats["measurements"]["hits"],
+                             meas_misses=stats["measurements"]["misses"],
+                             meas_evictions=stats["measurements"]["evictions"],
+                             col_hits=stats["columns"]["hits"],
+                             col_misses=stats["columns"]["misses"],
+                             col_evictions=stats["columns"]["evictions"],
+                             dedup_shared=stats["dedup_shared"]))
+    # acceptance: >= 2x fewer seconds per call than the PR 1 path on a
+    # multi-group workload.  Existential (best workload), not per-workload:
+    # a real scheduling regression sinks every row at once, while the
+    # smallest workloads (~ms per call) can individually flake on a noisy
+    # shared runner.
+    best = max(clean_speedups)
+    assert best >= floor, \
+        f"interleaved speedup peaked at {best:.2f}x, below the {floor}x floor"
+
+    # -- 3. AutoCCL through the same scheduler ----------------------------
+    ds = workloads[1][1]
+    for noise in (0.0, 0.01):
+        make = lambda: Simulator(hw, noise=noise, seed=1)
+        t_ser, t_int, a_ser, a_int, _ = _best_of(
+            make, lambda sim: autoccl.tune_workload(sim, ds,
+                                                    interleave=False),
+            make, lambda sim: autoccl.tune_workload(sim, ds),
+            reps)
+        if not noise:
+            assert a_ser == a_int, "autoccl interleaved changed results"
+        rows.append(dict(table="autoccl_interleave", tuner="autoccl",
+                         workload="deepseek-moe-16b/ep", noise=noise,
+                         serial_s=t_ser, interleaved_s=t_int,
+                         speedup=t_ser / t_int,
+                         identical=(a_ser == a_int)))
     return rows
 
 
 def headline(rows):
-    by = {(r["tuner"], r["noise"]): r for r in rows}
-    clean = by[("lagom", 0.0)]
-    noisy = by[("lagom", 0.01)]
-    return [
-        ("tuning_throughput.llama3_8b_speedup", clean["speedup"],
-         "target: >=5x vs sequential path (noise-free)"),
-        ("tuning_throughput.llama3_8b_seq_s", clean["seq_s"],
-         "seconds per tune_workload, sequential"),
-        ("tuning_throughput.llama3_8b_batched_s", clean["batched_s"],
-         "seconds per tune_workload, batched engine"),
-        ("tuning_throughput.llama3_8b_noisy_speedup", noisy["speedup"],
-         "jittered profiles: rate-column cache only"),
-        ("tuning_throughput.autoccl_speedup", by[("autoccl", 0.01)]["speedup"],
-         "baseline tuner through the same engine"),
+    eng = {(r["tuner"], r["noise"]): r for r in rows
+           if r["table"] == "engine_vs_event_loop"}
+    inter = {(r["workload"], r["noise"]): r for r in rows
+             if r["table"] == "interleave_vs_serial"}
+    multi_min = min(r["speedup"] for (w, n), r in inter.items() if n == 0.0)
+    out = [
+        ("tuning_throughput.llama3_8b_engine_speedup",
+         eng[("lagom", 0.0)]["speedup"],
+         "batched engine vs event loop; target: >=5x (PR 1)"),
+        ("tuning_throughput.multi_group_interleave_speedup_min",
+         multi_min,
+         "interleaved scheduler vs PR 1 serial walk, min over "
+         "multi-group workloads; target: >=2x, results byte-identical"),
     ]
+    for (w, n), r in sorted(inter.items()):
+        out.append((f"tuning_throughput.interleave.{w}.noise{n}",
+                    r["speedup"],
+                    f"{r['groups']} groups, {r['profiles']} profiles, "
+                    f"dedup_shared={r['dedup_shared']}"))
+    out.append(("tuning_throughput.autoccl_engine_speedup",
+                eng[("autoccl", 0.01)]["speedup"],
+                "baseline tuner through the same engine"))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: fewer reps, trimmed workloads, 1.3x floor")
+    args = ap.parse_args(argv)
+    rows = run(fast=args.fast)
+    for r in rows:
+        print(r)
+    for key, val, derived in headline(rows):
+        print(f"{key},{val:.4g},{derived}")
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(r)
+    main()

@@ -6,6 +6,8 @@
   contention  — Eqs. 4–6 + communication-time model
   cost_model  — Eqs. 1–3 closed form
   simulator   — event-driven ProfileTime oracle
+  profiling   — batched/vectorized ProfileTime engine + caches
+  scheduler   — cross-group interleaved tuning (resumable step machines)
   priority    — metric H (Eq. 7)
   tuner       — Algorithms 1–2 (Lagom)
   autoccl     — AutoCCL baseline tuner

@@ -8,13 +8,15 @@ communication-bound overlaps this is near-optimal; in computation-bound
 overlaps it over-allocates resources (e.g. NC=61 in the paper's Fig. 8)
 and can land below the NCCL default (0.87×).
 
-ProfileTime goes through ``Simulator.profile_group`` and therefore the
-batched engine's caches (core.profiling): coordinate descent revisits
-configs when a shrink/grow cycle stalls, and structurally identical layers
-repeat whole search trajectories, so AutoCCL never re-measures an
-already-profiled point.  Its inner loop stays sequential by necessity —
-each candidate's acceptance mutates the descent state (and the shared
-budget) that the next candidate derives from.
+ProfileTime goes through the batched engine's caches (core.profiling):
+coordinate descent revisits configs when a shrink/grow cycle stalls, and
+structurally identical layers repeat whole search trajectories, so AutoCCL
+never re-measures an already-profiled point.  Its inner loop stays
+sequential by necessity — each candidate's acceptance mutates the descent
+state (and the shared budget) that the next candidate derives from — so
+``AutoCCLSearch`` yields one-candidate batches; the cross-group scheduler
+(core.scheduler) still interleaves the per-group descents, folding every
+unfinished group's next sample into one engine call per step.
 """
 from __future__ import annotations
 
@@ -22,6 +24,8 @@ import math
 from typing import Dict, List, Tuple
 
 from repro.core.comm_params import CommConfig
+from repro.core.scheduler import (StepSearch, run_interleaved, run_serial,
+                                  run_shared)
 from repro.core.simulator import Simulator
 from repro.core.workload import ConfigSet, OverlapGroup, Workload
 
@@ -32,58 +36,90 @@ _SUBSPACES: List[Tuple[str, str]] = [
 ]
 
 
-def _measure_x(sim: Simulator, group: OverlapGroup, cfgs: List[CommConfig],
-               j: int) -> float:
-    """Online sampling: measure comm j's latency in-situ (overlap running)."""
-    return sim.profile_group(group, cfgs).comm_times[j]
+class AutoCCLSearch(StepSearch):
+    """AutoCCL's per-group search as a resumable step machine.  The
+    generator below is the former blocking coordinate descent with each
+    in-situ sample (``sim.profile_group``) replaced by a one-candidate
+    ``yield``; semantics and the per-comm budget are unchanged."""
+
+    def __init__(self, group: OverlapGroup, *, max_steps_per_comm: int = 24):
+        self.group = group
+        self.max_steps_per_comm = max_steps_per_comm
+        self.cfgs: List[CommConfig] = [CommConfig()
+                                       for _ in range(len(group.comms))]
+        super().__init__()
+
+    def _search(self):
+        group, cfgs = self.group, self.cfgs
+        for j in range(len(group.comms)):
+            best_cfg, best_x = None, math.inf
+            budget = self.max_steps_per_comm
+            for algo, proto in _SUBSPACES:
+                if budget <= 0:
+                    break
+                # coordinate descent on (nc, chunk) inside the subspace:
+                cur = CommConfig(algorithm=algo, protocol=proto,
+                                 nc=4, chunk_kb=512)
+                trial = list(cfgs)
+                trial[j] = cur
+                x_cur = (yield [trial])[0].comm_times[j]
+                budget -= 1
+                improved = True
+                while improved and budget > 0:
+                    improved = False
+                    for field_, vals in (
+                            ("nc", (cur.nc * 2, max(1, cur.nc // 2))),
+                            ("chunk_kb", (cur.chunk_kb * 2,
+                                          max(32, cur.chunk_kb // 2)))):
+                        for v in vals:
+                            if budget <= 0:
+                                break
+                            cand = cur.with_(**{field_: v})
+                            if cand == cur:
+                                continue
+                            trial[j] = cand
+                            x_c = (yield [trial])[0].comm_times[j]
+                            budget -= 1
+                            if x_c < x_cur * 0.995:
+                                cur, x_cur = cand, x_c
+                                improved = True
+                if x_cur < best_x:
+                    best_cfg, best_x = cur, x_cur
+            cfgs[j] = best_cfg.with_(done=True)
 
 
 def tune_group(sim: Simulator, group: OverlapGroup, *,
                max_steps_per_comm: int = 24) -> Tuple[List[CommConfig], int]:
-    n = len(group.comms)
-    start = sim.profile_count
-    cfgs = [CommConfig() for _ in range(n)]
-    for j in range(n):
-        best_cfg, best_x = None, math.inf
-        budget = max_steps_per_comm
-        for algo, proto in _SUBSPACES:
-            if budget <= 0:
-                break
-            # coordinate descent on (nc, chunk) inside the subspace:
-            cur = CommConfig(algorithm=algo, protocol=proto, nc=4, chunk_kb=512)
-            trial = list(cfgs)
-            trial[j] = cur
-            x_cur = _measure_x(sim, group, trial, j)
-            budget -= 1
-            improved = True
-            while improved and budget > 0:
-                improved = False
-                for field_, vals in (("nc", (cur.nc * 2, max(1, cur.nc // 2))),
-                                     ("chunk_kb", (cur.chunk_kb * 2, max(32, cur.chunk_kb // 2)))):
-                    for v in vals:
-                        if budget <= 0:
-                            break
-                        cand = cur.with_(**{field_: v})
-                        if cand == cur:
-                            continue
-                        trial[j] = cand
-                        x_c = _measure_x(sim, group, trial, j)
-                        budget -= 1
-                        if x_c < x_cur * 0.995:
-                            cur, x_cur = cand, x_c
-                            improved = True
-            if x_cur < best_x:
-                best_cfg, best_x = cur, x_cur
-        cfgs[j] = best_cfg.with_(done=True)
-    return cfgs, sim.profile_count - start
+    """Drive one ``AutoCCLSearch`` to completion (the serial walk)."""
+    s = AutoCCLSearch(group, max_steps_per_comm=max_steps_per_comm)
+    while not s.done:
+        s.feed(sim.profile_many(group, s.pending))
+    return s.cfgs, s.requests
 
 
-def tune_workload(sim: Simulator, wl: Workload) -> Tuple[ConfigSet, int]:
+def tune_workload(sim: Simulator, wl: Workload, *,
+                  interleave: bool = True) -> Tuple[ConfigSet, int]:
+    """Tune every overlap group; ``interleave=True`` (default) folds each
+    unfinished group's next in-situ sample into one cross-group engine call
+    per step, and in deterministic mode structurally identical groups share
+    one descent (scheduler.run_shared).  Noise-free results are identical
+    to the serial walk."""
+    from repro.core.profiling import group_fingerprint
+
+    if interleave and not sim.noise:
+        per_group = run_shared(sim, wl.groups, AutoCCLSearch,
+                               group_fingerprint)
+    else:
+        searches = [(g, AutoCCLSearch(g)) for g in wl.groups]
+        if interleave:
+            run_interleaved(sim, searches)
+        else:
+            run_serial(sim, searches)
+        per_group = [s for _, s in searches]
     configs: ConfigSet = {}
     iters = 0
-    for gi, g in enumerate(wl.groups):
-        res, it = tune_group(sim, g)
-        for ci, cfg in enumerate(res):
+    for gi, s in enumerate(per_group):
+        for ci, cfg in enumerate(s.cfgs):
             configs[(gi, ci)] = cfg
-        iters += it
+        iters += s.requests
     return configs, iters

@@ -32,13 +32,29 @@ Two advance strategies share the tables:
      candidate's current-head durations, take the per-candidate ``min``
      segment, retire heads.  The Python-level loop runs at most ~M+N times
      regardless of batch size, so interpreter cost amortizes across the
-     candidate set (benchmark sweeps, exhaustive probes).
+     candidate set (benchmark sweeps, exhaustive probes).  The advance is
+     HETEROGENEOUS: candidates may come from *different* overlap groups
+     (the cross-group scheduler's round-robin batches) — each candidate
+     carries its own (M, N) and its tables are padded to the batch maxima;
+     padding entries are never selected by the masked gathers.
+
+``measure_many_grouped`` is the scheduler's entry point: a list of
+``(group, cfg_lists)`` requests evaluated in one pass, sharing the
+rate-column cache across requests and deduplicating identical
+``(fingerprint, configs)`` candidates *within* the call — the engine
+computes each unique point once and fans the shared measurement out.
+(The scheduler's deterministic trajectory sharing already collapses
+identical groups *before* submission, so in-tree the dedup mainly guards
+duplicate candidate lists inside one ``profile_many`` batch and direct
+``run_interleaved`` users that skip sharing.)
 
 Noise-mode semantics: jitter multipliers are drawn from the *simulator's*
-RNG, one lognormal per comp then per comm, candidate-by-candidate in batch
-order — the identical stream a sequence of ``run_group`` calls would
-consume, so noisy refactored call sites reproduce seed measurements
-exactly.
+RNG, one lognormal per comp then per comm, candidate-by-candidate in flat
+submission order (requests in order, candidates within a request in list
+order) — the identical stream the ``batched=False`` reference path
+consumes when it replays ``run_group`` per candidate in the same order,
+so noisy refactored call sites reproduce seed measurements exactly.
+Noisy mode never deduplicates: every submitted candidate is a fresh draw.
 
 Cache-key semantics: the measurement-level LRU ``ProfileCache`` keys on a
 *structural* fingerprint of the group (op shapes/bytes; names excluded —
@@ -60,7 +76,7 @@ from __future__ import annotations
 
 import math
 from collections import OrderedDict
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -96,6 +112,7 @@ class ProfileCache:
         self._d: "OrderedDict[Tuple, Tuple]" = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._d)
@@ -114,9 +131,14 @@ class ProfileCache:
         self._d.move_to_end(key)
         while len(self._d) > self.maxsize:
             self._d.popitem(last=False)
+            self.evictions += 1
 
     def clear(self) -> None:
         self._d.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return dict(size=len(self._d), hits=self.hits, misses=self.misses,
+                    evictions=self.evictions)
 
 
 class _GroupKernel:
@@ -153,7 +175,12 @@ class BatchSimulator:
     """Vectorized + cached ProfileTime.  One engine per ``Simulator`` —
     it shares the simulator's hardware profile, noise setting, and RNG."""
 
-    _VECTOR_MIN = 16     # batch size at which lock-step array advance wins
+    # Batch size at which the lock-step array advance beats the scalar
+    # column-cached replay.  The replay is a handful of float ops per event,
+    # so NumPy's per-op dispatch only amortizes on large batches (measured
+    # break-even ~96 candidates on CPU across group shapes); below it the
+    # flat replay loop wins even for cross-group batches.
+    _VECTOR_MIN = 96
 
     def __init__(self, sim, cache_size: int = 131072):
         self.sim = sim
@@ -163,6 +190,7 @@ class BatchSimulator:
         self._fp_ids: Dict[Tuple, int] = {}        # fingerprint -> intern id
         self._groups: Dict[int, Tuple] = {}        # id(group) -> (group, fpi)
         self._alone: Dict[int, Tuple] = {}         # fpi -> alone comp column
+        self.dedup_shared = 0   # within-call duplicate candidates fanned out
 
     # -- public API ------------------------------------------------------
     #
@@ -194,39 +222,82 @@ class BatchSimulator:
                      cfg_lists: Sequence[Sequence[CommConfig]]) -> List:
         """Measure every candidate config list for one group.  Does NOT
         touch ``profile_count`` — the Simulator wrappers own accounting."""
-        from repro.core.simulator import GroupMeasurement  # cycle-free late import
-
+        if not cfg_lists:
+            return []
         if len(cfg_lists) == 1:
             return [self.measure_one(g, cfg_lists[0])]
+        return self.measure_many_grouped([(g, cfg_lists)])[0]
+
+    def measure_many_grouped(
+            self, requests: Sequence[Tuple[OverlapGroup,
+                                           Sequence[Sequence[CommConfig]]]]
+    ) -> List[List]:
+        """Heterogeneous batched ProfileTime: each request is ``(group,
+        cfg_lists)`` and the returned list of measurement lists aligns with
+        the requests.  All requests' misses advance in ONE lock-step pass,
+        sharing the per-group rate-column cache; identical noise-free
+        candidates are computed once per call (within-call dedup).  Jitter
+        draw order is the flat submission order (module docstring)."""
+        from repro.core.simulator import GroupMeasurement  # cycle-free late import
+
         noisy = bool(self.sim.noise)
-        fpi, kern = self._resolve(g)
-        name = g.name
         cache = self.cache
-        results: List = [None] * len(cfg_lists)
-        todo: List[int] = []
-        keys: List[Tuple] = [None] * len(cfg_lists)
-        for i, cfgs in enumerate(cfg_lists):
-            key = (fpi, tuple(map(_cfg_key, cfgs)))
-            keys[i] = key
-            gm = None if noisy else cache.get(key)
-            if gm is None:
-                todo.append(i)
-            else:
-                results[i] = gm
+        results: List[List] = [[None] * len(cfg_lists)
+                               for _, cfg_lists in requests]
+        todo: List[Tuple] = []      # (kern, fpi, cfgs) in submission order
+        keys: List = []             # cache key per todo entry (None if noisy)
+        sinks: List[List] = []      # (request, slot) fan-outs per todo entry
+        names: List[str] = []       # group name of the first submitter
+        first: Dict[Tuple, int] = {}
+        for ri, (g, cfg_lists) in enumerate(requests):
+            if not cfg_lists:
+                continue
+            fpi, kern = self._resolve(g)
+            for li, cfgs in enumerate(cfg_lists):
+                if noisy:                   # every candidate is a fresh draw
+                    todo.append((kern, fpi, cfgs))
+                    keys.append(None)
+                    sinks.append([(ri, li)])
+                    names.append(g.name)
+                    continue
+                key = (fpi, tuple(map(_cfg_key, cfgs)))
+                gm = cache.get(key)
+                if gm is not None:
+                    results[ri][li] = gm
+                    continue
+                ti = first.get(key)
+                if ti is not None:          # duplicate within this call
+                    sinks[ti].append((ri, li))
+                    self.dedup_shared += 1
+                    continue
+                first[key] = len(todo)
+                todo.append((kern, fpi, cfgs))
+                keys.append(key)
+                sinks.append([(ri, li)])
+                names.append(g.name)
         if todo:
-            batch = [cfg_lists[i] for i in todo]
+            cols_list = self._gather_columns(todo)
             if len(todo) >= self._VECTOR_MIN:
-                payloads = self._measure_lockstep(kern, fpi, batch, noisy)
+                payloads = self._measure_lockstep(todo, noisy, cols_list)
             else:
-                payloads = [self._measure_one(kern, fpi, cfgs, noisy)
-                            for cfgs in batch]
-            for i, p in zip(todo, payloads):
+                payloads = [self._measure_one(kern, fpi, cfgs, noisy, cols)
+                            for (kern, fpi, cfgs), cols
+                            in zip(todo, cols_list)]
+            for p, key, outs, name in zip(payloads, keys, sinks, names):
                 gm = GroupMeasurement(name, p[0], p[1], p[2],
                                       list(p[3]), list(p[4]))
-                if not noisy:
-                    cache.put(keys[i], gm)
-                results[i] = gm
+                if key is not None:
+                    cache.put(key, gm)
+                for ri, li in outs:
+                    results[ri][li] = gm
         return results
+
+    def cache_stats(self) -> Dict:
+        """Hit/miss/eviction counters for both LRUs plus the within-call
+        dedup fan-out count (benchmark telemetry)."""
+        return {"measurements": self.cache.stats(),
+                "columns": self.columns.stats(),
+                "dedup_shared": self.dedup_shared}
 
     _GROUP_MEMO_MAX = 4096      # id-memo bound: ephemeral groups must not pin
 
@@ -247,15 +318,19 @@ class BatchSimulator:
     def _alone_column(self, fpi: int, kern: _GroupKernel) -> Tuple:
         col = self._alone.get(fpi)
         if col is None:
-            col = kern.comp_column(None, 0.0, self.sim.hw)
+            col = (kern.comp_column(None, 0.0, self.sim.hw),)
+            col = col + (np.array(col[0], dtype=np.float64),)
             self._alone[fpi] = col
         return col
 
     def _column(self, fpi: int, kern: _GroupKernel, k: int, cfg: CommConfig):
-        """(comp durations under cfg, comm-op-k duration active/idle) —
-        everything the replay needs about slot k running ``cfg``.  Computed
-        with the vectorized contention kernels (bit-identical to the scalar
-        model; tests assert ``==``)."""
+        """(comp durations under cfg, comm-op-k duration active/idle, comp
+        durations as ndarray) — everything the replay needs about slot k
+        running ``cfg``.  Computed with the vectorized contention kernels
+        (bit-identical to the scalar model; tests assert ``==``).  The tuple
+        form feeds the scalar replay (tuple indexing is cheap in Python);
+        the ndarray twin feeds lock-step table assembly without a per-slice
+        tuple conversion."""
         key = (fpi, k, _cfg_key(cfg))
         v = self.columns.get(key)
         if v is None:
@@ -269,18 +344,102 @@ class BatchSimulator:
                                               ceil_, tmult, hw))
             args = (op.bytes, wb, ns, cfg.nc, cfg.nt, cfg.chunk_kb,
                     ceil_, cmult, tmult)
-            v = (kern.comp_column(cfg, V, hw),
+            col = kern.comp_column(cfg, V, hw)
+            v = (col,
                  float(C.comm_time_v(*args, hw, compute_active=True)),
-                 float(C.comm_time_v(*args, hw, compute_active=False)))
+                 float(C.comm_time_v(*args, hw, compute_active=False)),
+                 np.array(col, dtype=np.float64))
             self.columns.put(key, v)
         return v
 
+    def _gather_columns(self, todo: Sequence[Tuple]) -> List[List]:
+        """Resolve every candidate's rate columns for a batch, computing all
+        misses in one vectorized pass (``_compute_columns``).  Keys are
+        built ONCE per (candidate, slot) — the returned per-candidate column
+        lists feed both replay strategies, so no second cache walk
+        happens."""
+        out: List[List] = []
+        need: Dict[Tuple, Tuple] = {}   # key -> (kern, k, cfg), deduped
+        holes: List[Tuple] = []         # (cols, k, key) to patch post-compute
+        get = self.columns.get
+        for kern, fpi, cfgs in todo:
+            cols: List = [None] * len(cfgs)
+            for k, cfg in enumerate(cfgs):
+                key = (fpi, k, _cfg_key(cfg))
+                v = get(key)
+                if v is None:
+                    need.setdefault(key, (kern, k, cfg))
+                    holes.append((cols, k, key))
+                else:
+                    cols[k] = v
+            out.append(cols)
+        if need:
+            computed = self._compute_columns(need)
+            for cols, k, key in holes:
+                cols[k] = computed[key]
+        return out
+
+    def _compute_columns(self, need: Dict[Tuple, Tuple]) -> Dict[Tuple, Tuple]:
+        """Batch-compute missing rate columns: ONE vectorized
+        ``comm_time_v`` pass for all comm columns across all groups/slots,
+        and one broadcast ``comp_time_v`` per distinct group structure —
+        instead of per-column kernel calls from inside the replay.
+        Elementwise float64 ops are identical whether batched or scalar, so
+        the cached values are bit-equal to what ``_column`` would have
+        computed lazily."""
+        hw = self.sim.hw
+        need_keys = list(need.keys())
+        need_vals = list(need.values())
+        need_fpi = [key[0] for key in need_keys]
+        K = len(need_keys)
+        cols = np.empty((9, K))
+        for i, (kern, k, cfg) in enumerate(need_vals):
+            op = kern.comms[k]
+            pc, pm = C.PROTO_PARAMS[cfg.protocol]
+            cols[:, i] = (op.bytes, C.wire_bytes(op, cfg.algorithm),
+                          C.comm_steps(op, cfg.algorithm), cfg.nc, cfg.nt,
+                          cfg.chunk_kb, pc, pm,
+                          C.TRANSPORT_MULT[cfg.transport])
+        ob, wb, ns, nc, nt, ck, ceil_, cmult, tmult = cols
+        act = C.comm_time_v(ob, wb, ns, nc, nt, ck, ceil_, cmult, tmult,
+                            hw, compute_active=True).tolist()
+        idle = C.comm_time_v(ob, wb, ns, nc, nt, ck, ceil_, cmult, tmult,
+                             hw, compute_active=False).tolist()
+        V = C.comm_bandwidth_draw_v(nc, ck, ceil_, tmult, hw)
+        by_fpi: Dict[int, List[int]] = {}
+        for i, fpi in enumerate(need_fpi):
+            by_fpi.setdefault(fpi, []).append(i)
+        comp: List = [None] * K
+        for fpi, idx in by_fpi.items():
+            kern = self._kernels[fpi]
+            if kern.M:
+                ii = np.array(idx)
+                mat = C.comp_time_v(kern.theta_base, kern.threadblocks,
+                                    kern.tb_per_slot, kern.bytes_per_tb,
+                                    nc[ii][:, None], ck[ii][:, None],
+                                    V[ii][:, None], hw)
+                for r, i in enumerate(idx):
+                    comp[i] = np.ascontiguousarray(mat[r])
+            else:
+                empty = np.empty(0)
+                for i in idx:
+                    comp[i] = empty
+        out: Dict[Tuple, Tuple] = {}
+        for i, key in enumerate(need_keys):
+            v = (tuple(comp[i].tolist()), act[i], idle[i], comp[i])
+            self.columns.put(key, v)
+            out[key] = v
+        return out
+
     # -- single-candidate replay over cached rate columns -----------------
     def _measure_one(self, kern: _GroupKernel, fpi: int,
-                     cfgs: Sequence[CommConfig], noisy: bool) -> Tuple:
+                     cfgs: Sequence[CommConfig], noisy: bool,
+                     cols: Optional[List] = None) -> Tuple:
         M, N = kern.M, kern.N
-        alone = self._alone_column(fpi, kern)
-        cols = [self._column(fpi, kern, k, cfg) for k, cfg in enumerate(cfgs)]
+        alone = self._alone_column(fpi, kern)[0]
+        if cols is None:
+            cols = [self._column(fpi, kern, k, cfg)
+                    for k, cfg in enumerate(cfgs)]
         if noisy:
             rng, s = self.sim._rng, self.sim.noise
             jc = [float(rng.lognormal(0.0, s)) for _ in range(M)]
@@ -328,38 +487,47 @@ class BatchSimulator:
         return (t, comm_busy, comp_busy, tuple(comm_meas), tuple(comp_meas))
 
     # -- lock-step array advance for large batches ------------------------
-    def _tables(self, kern: _GroupKernel,
-                cfg_lists: Sequence[Sequence[CommConfig]], fpi: int):
-        """Assemble (C, M, N+1) comp and (C, N) comm duration tables from
-        the column cache."""
-        Cn, M, N = len(cfg_lists), kern.M, kern.N
-        alone = self._alone_column(fpi, kern)
-        comp_dur = np.empty((Cn, max(M, 1), N + 1))
-        comm_act = np.empty((Cn, max(N, 1)))
-        comm_idle = np.empty((Cn, max(N, 1)))
-        for c, cfgs in enumerate(cfg_lists):
-            for k, cfg in enumerate(cfgs):
-                col = self._column(fpi, kern, k, cfg)
+    def _measure_lockstep(self, entries: Sequence[Tuple], noisy: bool,
+                          cols_list: Optional[List[List]] = None) -> List[Tuple]:
+        """Advance a heterogeneous candidate batch in lock step.  Each entry
+        is ``(kern, fpi, cfgs)`` — candidates may belong to different groups.
+        Per-candidate tables are padded to the batch-wide (max M, max N);
+        padding cells hold 1.0 and are never selected: the gathers clip
+        indices to each candidate's own (M, N) and the ``where`` masks zero
+        any contribution from finished streams."""
+        Cn = len(entries)
+        if cols_list is None:
+            cols_list = self._gather_columns(entries)
+        Ms = np.array([e[0].M for e in entries], dtype=np.int64)
+        Ns = np.array([e[0].N for e in entries], dtype=np.int64)
+        maxM, maxN = int(Ms.max()), int(Ns.max())
+        comp_dur = np.ones((Cn, max(maxM, 1), maxN + 1))
+        comm_act = np.ones((Cn, max(maxN, 1)))
+        comm_idle = np.ones((Cn, max(maxN, 1)))
+        for c, (kern, fpi, cfgs) in enumerate(entries):
+            M, N = kern.M, kern.N
+            for k, col in enumerate(cols_list[c]):
                 if M:
-                    comp_dur[c, :, k] = col[0]
+                    comp_dur[c, :M, k] = col[3]
                 comm_act[c, k] = col[1]
                 comm_idle[c, k] = col[2]
-            if M:
-                comp_dur[c, :, N] = alone
-        return comp_dur, comm_act, comm_idle
-
-    def _measure_lockstep(self, kern: _GroupKernel, fpi: int,
-                          cfg_lists: Sequence[Sequence[CommConfig]],
-                          noisy: bool) -> List[Tuple]:
-        Cn, M, N = len(cfg_lists), kern.M, kern.N
-        comp_dur, comm_act, comm_idle = self._tables(kern, cfg_lists, fpi)
+            if M:                   # column N = this candidate's alone rates
+                comp_dur[c, :M, N] = self._alone_column(fpi, kern)[1]
         if noisy:
-            rng, s = self.sim._rng, self.sim.noise
-            jc = np.empty((Cn, max(M, 1)))
-            jk = np.empty((Cn, max(N, 1)))
-            for c in range(Cn):     # candidate-by-candidate: run_group's order
-                jc[c, :M] = [float(rng.lognormal(0.0, s)) for _ in range(M)]
-                jk[c, :N] = [float(rng.lognormal(0.0, s)) for _ in range(N)]
+            # One flat draw covering the whole batch: numpy Generators fill
+            # sized draws sequentially, so this consumes the identical RNG
+            # stream a candidate-by-candidate loop of scalar draws would
+            # (run_group's order: per candidate, M comp then N comm).
+            draw = self.sim._rng.lognormal(0.0, self.sim.noise,
+                                           int((Ms + Ns).sum()))
+            jc = np.ones((Cn, max(maxM, 1)))
+            jk = np.ones((Cn, max(maxN, 1)))
+            off = 0
+            for c in range(Cn):
+                M, N = int(Ms[c]), int(Ns[c])
+                jc[c, :M] = draw[off:off + M]
+                jk[c, :N] = draw[off + M:off + M + N]
+                off += M + N
             comp_dur = comp_dur * jc[:, :, None]
             comm_act = comm_act * jk
             comm_idle = comm_idle * jk
@@ -372,33 +540,35 @@ class BatchSimulator:
         t = np.zeros(Cn)
         comp_busy = np.zeros(Cn)
         comm_busy = np.zeros(Cn)
-        comp_meas = np.zeros((Cn, max(M, 1)))
-        comm_meas = np.zeros((Cn, max(N, 1)))
+        comp_meas = np.zeros((Cn, max(maxM, 1)))
+        comm_meas = np.zeros((Cn, max(maxN, 1)))
+        ci_max = np.maximum(Ms - 1, 0)
+        ki_max = np.maximum(Ns - 1, 0)
 
         guard = 0
         while True:
-            comp_on = ci < M
-            comm_on = ki < N
+            comp_on = ci < Ms
+            comm_on = ki < Ns
             alive = comp_on | comm_on
             if not alive.any():
                 break
             guard += 1
-            if guard > 4 * (M + N) + 16:
+            if guard > 4 * (maxM + maxN) + 16:
                 raise RuntimeError("batched simulator did not converge")
 
-            ci_i = np.minimum(ci, max(M - 1, 0))
-            ki_i = np.minimum(ki, max(N - 1, 0))
-            d_comp = comp_dur[ar, ci_i, np.where(comm_on, ki_i, N)] if M \
+            ci_i = np.minimum(ci, ci_max)
+            ki_i = np.minimum(ki, ki_max)
+            d_comp = comp_dur[ar, ci_i, np.where(comm_on, ki_i, Ns)] if maxM \
                 else np.ones(Cn)
             d_comm = np.where(comp_on, comm_act[ar, ki_i],
-                              comm_idle[ar, ki_i]) if N \
+                              comm_idle[ar, ki_i]) if maxN \
                 else np.ones(Cn)
             rem_comp = np.where(comp_on, cur_comp * d_comp, np.inf)
             rem_comm = np.where(comm_on, cur_comm * d_comm, np.inf)
             dt = np.where(alive, np.minimum(rem_comp, rem_comm), 0.0)
             t += dt
 
-            if M:
+            if maxM:
                 dtc = np.where(comp_on, dt, 0.0)
                 comp_busy += dtc
                 comp_meas[ar, ci_i] += dtc
@@ -409,7 +579,7 @@ class BatchSimulator:
                 fin = comp_on & (cur_comp <= _TINY)
                 ci = ci + fin
                 cur_comp = np.where(fin, 1.0, cur_comp)
-            if N:
+            if maxN:
                 dtk = np.where(comm_on, dt, 0.0)
                 comm_busy += dtk
                 comm_meas[ar, ki_i] += dtk
@@ -421,7 +591,8 @@ class BatchSimulator:
                 ki = ki + fin
                 cur_comm = np.where(fin, 1.0, cur_comm)
 
-        return [(float(t[c]), float(comm_busy[c]), float(comp_busy[c]),
-                 tuple(float(x) for x in comm_meas[c, :N]),
-                 tuple(float(x) for x in comp_meas[c, :M]))
-                for c in range(Cn)]
+        tl, xb, yb = t.tolist(), comm_busy.tolist(), comp_busy.tolist()
+        km, cm = comm_meas.tolist(), comp_meas.tolist()
+        return [(tl[c], xb[c], yb[c], tuple(km[c][:e[0].N]),
+                 tuple(cm[c][:e[0].M]))
+                for c, e in enumerate(entries)]

@@ -150,8 +150,30 @@ class Simulator:
                      cfg_lists: List[List[CommConfig]]) -> List[GroupMeasurement]:
         """Batched ProfileTime: one logical invocation per candidate (the
         Fig. 8c counter sees exactly what a loop of ``profile_group`` calls
-        would), evaluated in a single vectorized pass."""
+        would), evaluated in a single vectorized pass.  An empty candidate
+        list returns ``[]`` without touching the engine or the counter."""
+        if not cfg_lists:
+            return []
         self.profile_count += len(cfg_lists)
         if self.batched:
             return self.engine.measure_many(g, cfg_lists)
         return [self.run_group(g, cfgs) for cfgs in cfg_lists]
+
+    def profile_many_grouped(
+            self, requests: List[Tuple[OverlapGroup, List[List[CommConfig]]]],
+    ) -> List[List[GroupMeasurement]]:
+        """Cross-group batched ProfileTime for the tuning scheduler: every
+        request is ``(group, cfg_lists)`` and the result lists align with
+        the requests.  Accounting is unchanged — one logical invocation per
+        candidate, summed across requests, so an interleaved schedule
+        reports the same ``profile_count`` as the serial walk.  In noisy
+        mode the reference path consumes the jitter RNG in flat submission
+        order, matching the engine's draw contract (core.scheduler)."""
+        total = sum(len(cfg_lists) for _, cfg_lists in requests)
+        if not total:
+            return [[] for _ in requests]
+        self.profile_count += total
+        if self.batched:
+            return self.engine.measure_many_grouped(requests)
+        return [[self.run_group(g, cfgs) for cfgs in cfg_lists]
+                for g, cfg_lists in requests]

@@ -9,24 +9,29 @@ multiplicative step on NC/NT/C (integer dials move by at least 1).  The
 complexity remains linear in the number of communications: each comm takes
 O(log(range)) growth steps and comms are tuned one-at-a-time by priority.
 
-ProfileTime plumbing: the independent measurements of one tuning step — the
-four subspace probes and the per-dial growth candidates — go through
-``Simulator.profile_many`` so the batched engine (core.profiling) evaluates
-them in one pass; sequentially dependent steps (bisection refinement, the
-post-probe re-measure) stay on ``profile_group``.  Both routes are
-numerically identical to the seed's per-call event loop, including the
-noise RNG stream, and ``profile_count`` still counts logical invocations.
+ProfileTime plumbing: the whole search is a resumable step machine
+(``GroupSearch``, built on ``scheduler.StepSearch``) that *yields* its next
+candidate batch — subspace probes, per-dial growth candidates, bisection
+midpoints — and consumes the measurements fed back.  ``tune_group`` drives
+one machine to completion through ``Simulator.profile_many`` (the serial
+walk, bit-identical to the seed's per-call event loop including the noise
+RNG stream); ``tune_workload`` round-robins every group's pending batch
+into one cross-group ``profile_many_grouped`` call per step
+(``interleave=True``, the engine-aware default), which in deterministic
+mode produces configs, traces, and ``profile_count`` identical to the
+serial walk.  ``profile_count`` still counts logical invocations.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import priority
 from repro.core.comm_params import (C_MAX_KB, C_MIN_KB, NC_MAX, NC_MIN,
                                     NT_MAX, CommConfig, min_config)
+from repro.core.scheduler import (StepSearch, run_interleaved, run_serial,
+                                  run_shared)
 from repro.core.simulator import Simulator
 from repro.core.workload import ConfigSet, OverlapGroup, Workload
 
@@ -115,160 +120,211 @@ def warm_start_config(group: OverlapGroup, j: int, hw) -> CommConfig:
     return best[1]
 
 
+class GroupSearch(StepSearch):
+    """Algorithm 1/2 over one overlap group as a resumable step machine:
+    the generator body below is the former blocking loop with every
+    ProfileTime call replaced by a ``yield`` of the candidate batch, so the
+    search semantics are textually intact while a scheduler can interleave
+    many groups' measurement points.  ``warm_start=True`` enables the
+    beyond-paper cost-model seeding (see warm_start_config)."""
+
+    def __init__(self, group: OverlapGroup, hw, *,
+                 base: Optional[CommConfig] = None,
+                 warm_start: bool = False, max_steps: int = 200):
+        self.group = group
+        self.hw = hw
+        self.base = base
+        self.warm_start = warm_start
+        self.max_steps = max_steps
+        n = len(group.comms)
+        if warm_start:
+            self.states = [_CommState(cfg=warm_start_config(group, j, hw))
+                           for j in range(n)]
+        else:
+            self.states = [_CommState(cfg=min_config(base)) for _ in range(n)]
+        self.trace: List[Dict] = []
+        super().__init__()
+
+    def result(self) -> TuneResult:
+        if not self.done:
+            raise RuntimeError("search still has pending measurements")
+        return TuneResult([s.cfg for s in self.states], self.requests,
+                          self.trace)
+
+    def _search(self):
+        group, states, trace = self.group, self.states, self.trace
+        warm_start = self.warm_start
+        n = len(group.comms)
+        if n == 0:
+            return
+
+        # Alg 1 line 3: while ∃ s not done
+        steps = 0
+        prev_meas = None
+        while any(not s.done for s in states) and steps < self.max_steps:
+            steps += 1
+            # line 4: argmin H among unfinished (first minimum wins, like min())
+            j = -1
+            for i in range(n):
+                if not states[i].done and (j < 0 or states[i].h < states[j].h):
+                    j = i
+            st = states[j]
+
+            # ---- Algorithm 2 for communication j -------------------------
+            if not st.initialized:                  # lines 1–3: minimum config
+                st.initialized = True
+                # divide-and-conquer subspace pick (the AutoCCL framework
+                # Lagom plugs into, Sec. 3.2): probe implementation-related
+                # params at a mid-resource point, keep the best, then restart
+                # from minimum.
+                subs = (("ring", "mixed"), ("ring", "bulk"),
+                        ("tree", "mixed"), ("bidir", "bulk"))
+                probe_lists = []
+                for algo, proto in subs:
+                    probe = st.cfg.with_(algorithm=algo, protocol=proto,
+                                         nc=4, chunk_kb=1024)
+                    cfgs = [states[i].cfg for i in range(n)]
+                    cfgs[j] = probe
+                    probe_lists.append(cfgs)
+                best_sub, best_x = None, math.inf
+                for (algo, proto), m in zip(subs, (yield probe_lists)):
+                    if m.comm_times[j] < best_x:
+                        best_sub, best_x = (algo, proto), m.comm_times[j]
+                if warm_start:  # keep the cost-model seed, adopt the subspace
+                    st.cfg = st.cfg.with_(algorithm=best_sub[0],
+                                          protocol=best_sub[1])
+                else:           # paper-faithful: restart from the minimum
+                    st.cfg = min_config(st.cfg).with_(algorithm=best_sub[0],
+                                                      protocol=best_sub[1])
+                cand = st.cfg
+                cfgs = [states[i].cfg for i in range(n)]
+                cfgs[j] = cand
+                meas = (yield [cfgs])[0]
+            else:
+                cands = _grow_candidates(st.cfg, st.lr, shrink=warm_start)
+                if not cands:                       # all dials saturated
+                    st.done = True
+                    st.cfg = st.cfg.with_(done=True)
+                    continue
+                cfgs = [states[i].cfg for i in range(n)]
+                cand_lists = []
+                for _, c in cands:
+                    l = list(cfgs)
+                    l[j] = c
+                    cand_lists.append(l)
+                best = None                         # step the best dial
+                for (_, c), m in zip(cands, (yield cand_lists)):
+                    if best is None or m.Z < best[1].Z:
+                        best = (c, m)
+                cand, meas = best
+                cfgs[j] = cand
+                if warm_start and prev_meas is not None \
+                        and meas.Z >= prev_meas.Z * 0.998:
+                    # warm mode is Z-driven: no candidate improves -> done
+                    st.done = True
+                    st.cfg = st.cfg.with_(done=True)
+                    st.h = math.inf
+                    continue
+            x_new = meas.comm_times[j]
+            X_, Y_ = meas.X, meas.Y
+            y_before = prev_meas.Y if prev_meas is not None else Y_
+            x_before = st.last_x
+
+            trace.append(dict(step=steps, comm=j, cfg=cand, x=x_new, X=X_,
+                              Y=Y_, Z=meas.Z, h=st.h))
+
+            # line 5: terminate if comm got slower, or comm fully hidden.
+            # (2% guard band: profiles are noisy; the paper's real system
+            # faces the same jitter on wall-clock measurements)
+            # warm-start mode is purely Z-driven: skip the paper's x/X<Y stops.
+            if warm_start:
+                st.cfg = cand
+                st.last_x = x_new
+                prev_meas = meas
+                continue
+            if x_new - x_before > 0.02 * x_before \
+                    and not math.isinf(st.last_x):
+                st.done = True                      # revert: keep st.cfg
+                st.cfg = st.cfg.with_(done=True)
+                st.h = math.inf
+                continue
+            if X_ < Y_:
+                # crossed the X=Y boundary (§3.4 condition 3): the optimum
+                # sits between the previous config and this one — bisect
+                # toward it.
+                best_cfg, best_z = cand, meas.Z
+                lo, hi = st.cfg, cand
+                for _ in range(3):
+                    mid = _midpoint(lo, hi)
+                    if mid in (lo, hi):
+                        break
+                    cfgs[j] = mid
+                    m2 = (yield [cfgs])[0]
+                    trace.append(dict(step=steps, comm=j, cfg=mid,
+                                      x=m2.comm_times[j], X=m2.X, Y=m2.Y,
+                                      Z=m2.Z, h=st.h, bisect=True))
+                    if m2.Z < best_z:
+                        best_cfg, best_z = mid, m2.Z
+                    if m2.X < m2.Y:
+                        hi = mid    # still past the boundary — shrink down
+                    else:
+                        lo = mid
+                st.cfg = best_cfg.with_(done=True)
+                st.done = True
+                st.last_x = x_new
+                prev_meas = meas
+                continue
+
+            # accept; lines 8–11: grow by relative improvement
+            if not math.isinf(st.last_x):
+                st.lr = max(0.0, (x_before - x_new) / max(x_new, 1e-12))
+                st.h = priority.metric_h(y_before, Y_, x_before, x_new)
+            st.cfg = cand
+            st.last_x = x_new
+            st.history.append((cand, x_new))
+            prev_meas = meas
+
+
 def tune_group(sim: Simulator, group: OverlapGroup, *,
                base: Optional[CommConfig] = None,
                warm_start: bool = False,
                max_steps: int = 200) -> TuneResult:
-    """Algorithm 1 over one overlap group.  ``warm_start=True`` enables the
-    beyond-paper cost-model seeding (see warm_start_config)."""
-    n = len(group.comms)
-    if n == 0:
-        return TuneResult([], 0, [])
-    if warm_start:
-        states = [_CommState(cfg=warm_start_config(group, j, sim.hw))
-                  for j in range(n)]
-    else:
-        states = [_CommState(cfg=min_config(base)) for _ in range(n)]
-    trace: List[Dict] = []
-    start_profiles = sim.profile_count
-    profile = partial(sim.profile_group, group)
-    profile_batch = partial(sim.profile_many, group)
-
-    # Alg 1 line 3: while ∃ s not done
-    steps = 0
-    prev_meas = None
-    while any(not s.done for s in states) and steps < max_steps:
-        steps += 1
-        # line 4: argmin H among unfinished (first minimum wins, like min())
-        j = -1
-        for i in range(n):
-            if not states[i].done and (j < 0 or states[i].h < states[j].h):
-                j = i
-        st = states[j]
-
-        # ---- Algorithm 2 for communication j -----------------------------
-        if not st.initialized:                      # lines 1–3: minimum config
-            st.initialized = True
-            # divide-and-conquer subspace pick (the AutoCCL framework Lagom
-            # plugs into, Sec. 3.2): probe implementation-related params at a
-            # mid-resource point, keep the best, then restart from minimum.
-            subs = (("ring", "mixed"), ("ring", "bulk"),
-                    ("tree", "mixed"), ("bidir", "bulk"))
-            probe_lists = []
-            for algo, proto in subs:
-                probe = st.cfg.with_(algorithm=algo, protocol=proto,
-                                     nc=4, chunk_kb=1024)
-                cfgs = [states[i].cfg for i in range(n)]
-                cfgs[j] = probe
-                probe_lists.append(cfgs)
-            best_sub, best_x = None, math.inf
-            for (algo, proto), m in zip(subs, profile_batch(probe_lists)):
-                if m.comm_times[j] < best_x:
-                    best_sub, best_x = (algo, proto), m.comm_times[j]
-            if warm_start:   # keep the cost-model seed, adopt the subspace
-                st.cfg = st.cfg.with_(algorithm=best_sub[0], protocol=best_sub[1])
-            else:            # paper-faithful: restart from the minimum
-                st.cfg = min_config(st.cfg).with_(algorithm=best_sub[0],
-                                                  protocol=best_sub[1])
-            cand = st.cfg
-            cfgs = [states[i].cfg for i in range(n)]
-            cfgs[j] = cand
-            meas = profile(cfgs)
-        else:
-            cands = _grow_candidates(st.cfg, st.lr, shrink=warm_start)
-            if not cands:                           # all dials saturated
-                st.done = True
-                st.cfg = st.cfg.with_(done=True)
-                continue
-            cfgs = [states[i].cfg for i in range(n)]
-            cand_lists = []
-            for _, c in cands:
-                l = list(cfgs)
-                l[j] = c
-                cand_lists.append(l)
-            best = None                             # step the best dial
-            for (_, c), m in zip(cands, profile_batch(cand_lists)):
-                if best is None or m.Z < best[1].Z:
-                    best = (c, m)
-            cand, meas = best
-            cfgs[j] = cand
-            if warm_start and prev_meas is not None \
-                    and meas.Z >= prev_meas.Z * 0.998:
-                # warm mode is Z-driven: no candidate improves -> done
-                st.done = True
-                st.cfg = st.cfg.with_(done=True)
-                st.h = math.inf
-                continue
-        x_new = meas.comm_times[j]
-        X_, Y_ = meas.X, meas.Y
-        y_before = prev_meas.Y if prev_meas is not None else Y_
-        x_before = st.last_x
-
-        trace.append(dict(step=steps, comm=j, cfg=cand, x=x_new, X=X_, Y=Y_,
-                          Z=meas.Z, h=st.h))
-
-        # line 5: terminate if comm got slower, or comm fully hidden.
-        # (2% guard band: profiles are noisy; the paper's real system faces
-        # the same jitter on wall-clock measurements)
-        # warm-start mode is purely Z-driven: skip the paper's x/X<Y stops.
-        if warm_start:
-            st.cfg = cand
-            st.last_x = x_new
-            prev_meas = meas
-            continue
-        if x_new - x_before > 0.02 * x_before and st.last_x is not math.inf:
-            st.done = True                          # revert: keep st.cfg
-            st.cfg = st.cfg.with_(done=True)
-            st.h = math.inf
-            continue
-        if X_ < Y_:
-            # crossed the X=Y boundary (§3.4 condition 3): the optimum sits
-            # between the previous config and this one — bisect toward it.
-            best_cfg, best_z = cand, meas.Z
-            lo, hi = st.cfg, cand
-            for _ in range(3):
-                mid = _midpoint(lo, hi)
-                if mid in (lo, hi):
-                    break
-                cfgs[j] = mid
-                m2 = profile(cfgs)
-                trace.append(dict(step=steps, comm=j, cfg=mid, x=m2.comm_times[j],
-                                  X=m2.X, Y=m2.Y, Z=m2.Z, h=st.h, bisect=True))
-                if m2.Z < best_z:
-                    best_cfg, best_z = mid, m2.Z
-                if m2.X < m2.Y:
-                    hi = mid        # still past the boundary — shrink down
-                else:
-                    lo = mid
-            st.cfg = best_cfg.with_(done=True)
-            st.done = True
-            st.last_x = x_new
-            prev_meas = meas
-            continue
-
-        # accept; lines 8–11: grow by relative improvement
-        if st.last_x is not math.inf:
-            st.lr = max(0.0, (x_before - x_new) / max(x_new, 1e-12))
-            st.h = priority.metric_h(y_before, Y_, x_before, x_new)
-        st.cfg = cand
-        st.last_x = x_new
-        st.history.append((cand, x_new))
-        prev_meas = meas
-
-    return TuneResult([s.cfg for s in states],
-                      sim.profile_count - start_profiles, trace)
+    """Drive one ``GroupSearch`` to completion (the serial walk)."""
+    gs = GroupSearch(group, sim.hw, base=base, warm_start=warm_start,
+                     max_steps=max_steps)
+    while not gs.done:
+        gs.feed(sim.profile_many(group, gs.pending))
+    return gs.result()
 
 
 def tune_workload(sim: Simulator, wl: Workload, *,
                   base: Optional[CommConfig] = None,
-                  warm_start: bool = False) -> Tuple[ConfigSet, int, List[Dict]]:
+                  warm_start: bool = False,
+                  interleave: bool = True) -> Tuple[ConfigSet, int, List[Dict]]:
     """Tune every overlap group; groups are independent (their comms only
-    contend within their own window)."""
+    contend within their own window), so their searches interleave into one
+    cross-group engine call per step by default — and in deterministic mode
+    structurally identical groups share one trajectory outright
+    (scheduler.run_shared).  ``interleave=False`` restores the serial group
+    walk; in deterministic mode both schedules return identical configs,
+    traces, and ``profile_count``."""
+    from repro.core.profiling import group_fingerprint
+
+    make = lambda g: GroupSearch(g, sim.hw, base=base, warm_start=warm_start)
+    if interleave and not sim.noise:
+        per_group = run_shared(sim, wl.groups, make, group_fingerprint)
+    else:
+        searches = [(g, make(g)) for g in wl.groups]
+        if interleave:
+            run_interleaved(sim, searches)
+        else:
+            run_serial(sim, searches)
+        per_group = [s for _, s in searches]
     configs: ConfigSet = {}
     iters = 0
     traces: List[Dict] = []
-    for gi, g in enumerate(wl.groups):
-        res = tune_group(sim, g, base=base, warm_start=warm_start)
+    for gi, gs in enumerate(per_group):
+        res = gs.result()
         for ci, cfg in enumerate(res.configs):
             configs[(gi, ci)] = cfg
         iters += res.iterations

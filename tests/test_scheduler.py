@@ -1,0 +1,194 @@
+"""Cross-group interleaved tuning: the scheduler must be a pure
+re-scheduling of the serial group walk.  Deterministic mode: configs,
+traces, and ``profile_count`` byte-identical to ``interleave=False`` on
+every multi-group model-zoo workload.  Noisy mode: results follow the
+documented RNG contract (jitter drawn in flat submission order) — they are
+seed-reproducible and identical between the batched engine and the
+``batched=False`` reference path, though legitimately different from the
+serial interleaving."""
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core import (A40_NVLINK, TPU_V5E, CommConfig, ParallelPlan,
+                        Simulator, extract_workload)
+from repro.core import autoccl, tuner
+from repro.core.scheduler import StepSearch
+from repro.core.workload import CommOp, OverlapGroup, matmul_comp
+
+_MOE = {"qwen2-moe-a2.7b", "deepseek-v2-lite-16b", "deepseek-moe-16b",
+        "olmoe-1b-7b"}
+
+
+def _zoo_workloads():
+    """One multi-group workload per model-zoo arch (EP for the MoE configs,
+    FSDP otherwise) plus pipeline / tensor-parallel plans — every overlap
+    pattern the extractor produces, all with ≥2 groups."""
+    wls = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        if arch in _MOE:
+            plan = ParallelPlan(kind="ep", ep=8)
+            layers = max(3, cfg.first_dense_layers + 2)
+        else:
+            plan = ParallelPlan(kind="fsdp", dp=8)
+            layers = 2
+        wls.append((arch, extract_workload(cfg, plan, seq=2048,
+                                           global_batch=16, layers=layers)))
+    wls.append(("yi-34b/pp", extract_workload(
+        get_config("yi-34b"), ParallelPlan(kind="pp", pp=4, microbatches=4),
+        seq=2048, global_batch=16)))
+    wls.append(("llama3-8b/tp", extract_workload(
+        get_config("llama3-8b"), ParallelPlan(kind="tp", tp=8),
+        seq=2048, global_batch=16, layers=2)))
+    return wls
+
+
+def test_interleaved_identical_to_serial_across_model_zoo():
+    for name, wl in _zoo_workloads():
+        assert len(wl.groups) >= 2, name
+        s_ser = Simulator(TPU_V5E, seed=0)
+        c1, i1, t1 = tuner.tune_workload(s_ser, wl, interleave=False)
+        s_int = Simulator(TPU_V5E, seed=0)
+        c2, i2, t2 = tuner.tune_workload(s_int, wl, interleave=True)
+        assert c1 == c2, name
+        assert i1 == i2, name
+        assert t1 == t2, name                       # byte-identical traces
+        assert s_ser.profile_count == s_int.profile_count, name
+
+
+def test_interleaved_identical_to_serial_warm_start():
+    wl = extract_workload(get_config("llama3-8b"),
+                          ParallelPlan(kind="fsdp", dp=8),
+                          seq=2048, global_batch=16, layers=3)
+    r1 = tuner.tune_workload(Simulator(A40_NVLINK, seed=0), wl,
+                             warm_start=True, interleave=False)
+    r2 = tuner.tune_workload(Simulator(A40_NVLINK, seed=0), wl,
+                             warm_start=True, interleave=True)
+    assert r1 == r2
+
+
+def test_autoccl_interleaved_identical_to_serial():
+    for name, wl in (("deepseek-moe-16b", extract_workload(
+            get_config("deepseek-moe-16b"), ParallelPlan(kind="ep", ep=8),
+            seq=2048, global_batch=16, layers=3)),
+                     ("phi2-2b", extract_workload(
+            get_config("phi2-2b"), ParallelPlan(kind="fsdp", dp=8),
+            seq=2048, global_batch=16, layers=2))):
+        a1 = autoccl.tune_workload(Simulator(TPU_V5E, seed=1), wl,
+                                   interleave=False)
+        a2 = autoccl.tune_workload(Simulator(TPU_V5E, seed=1), wl,
+                                   interleave=True)
+        assert a1 == a2, name
+
+
+@pytest.mark.parametrize("tune", [
+    lambda sim, wl: tuner.tune_workload(sim, wl),
+    lambda sim, wl: autoccl.tune_workload(sim, wl),
+], ids=["lagom", "autoccl"])
+def test_noisy_interleaved_seed_reproducible(tune):
+    """The RNG contract: same seed + same workload -> same results, and the
+    batched engine consumes the identical stream as the ``batched=False``
+    reference path replaying ``run_group`` in flat submission order."""
+    wl = extract_workload(get_config("phi2-2b"),
+                          ParallelPlan(kind="fsdp", dp=8),
+                          seq=2048, global_batch=16, layers=3)
+    r1 = tune(Simulator(A40_NVLINK, noise=0.02, seed=7), wl)
+    r2 = tune(Simulator(A40_NVLINK, noise=0.02, seed=7), wl)
+    assert r1 == r2
+    r3 = tune(Simulator(A40_NVLINK, noise=0.02, seed=7, batched=False), wl)
+    assert r1 == r3
+
+
+def test_noisy_mode_never_shares_trajectories():
+    """Structurally identical layers must tune independently under jitter —
+    each group's search consumes its own draws.  (With trajectory sharing
+    they would be byte-equal by construction.)"""
+    wl = extract_workload(get_config("phi2-2b"),
+                          ParallelPlan(kind="fsdp", dp=8),
+                          seq=2048, global_batch=16, layers=4)
+    sim = Simulator(A40_NVLINK, noise=0.05, seed=3)
+    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    n0 = len(wl.groups[0].comms)
+    layer_cfgs = [tuple(cfgs[(gi, ci)] for ci in range(n0))
+                  for gi in range(4)]         # the four fwd layers
+    assert len(set(layer_cfgs)) > 1
+
+
+def _toy_group():
+    return OverlapGroup("g", comps=[matmul_comp("m", 1024, 512, 2048)],
+                        comms=[CommOp("c", "allgather", 3e7, 8)])
+
+
+@pytest.mark.parametrize("batched", [True, False])
+def test_empty_candidate_lists_touch_nothing(batched):
+    g = _toy_group()
+    sim = Simulator(A40_NVLINK, batched=batched)
+    assert sim.profile_many(g, []) == []
+    assert sim.profile_many_grouped([]) == []
+    assert sim.profile_many_grouped([(g, []), (g, [])]) == [[], []]
+    assert sim.profile_count == 0
+    if batched:
+        assert sim.engine.measure_many(g, []) == []
+        assert len(sim.engine.cache) == 0
+        assert len(sim.engine.columns) == 0
+
+
+def test_profile_many_grouped_counts_and_aligns():
+    g1 = _toy_group()
+    g2 = OverlapGroup("h", comps=[matmul_comp("m", 512, 512, 512)],
+                      comms=[CommOp("c", "allreduce", 1e7, 8),
+                             CommOp("d", "allreduce", 1e7, 8)])
+    sim = Simulator(A40_NVLINK)
+    reqs = [(g1, [[CommConfig(nc=n)] for n in (1, 2, 4)]),
+            (g2, []),
+            (g2, [[CommConfig(), CommConfig(nc=2)]])]
+    out = sim.profile_many_grouped(reqs)
+    assert sim.profile_count == 4
+    assert [len(r) for r in out] == [3, 0, 1]
+    # aligned with a per-request sequential evaluation
+    ref = Simulator(A40_NVLINK, batched=False)
+    for (g, lists), res in zip(reqs, out):
+        for cfgs, m in zip(lists, res):
+            r = ref.run_group(g, cfgs)
+            assert (m.Z, m.X, m.Y) == (r.Z, r.X, r.Y)
+            assert list(m.comm_times) == list(r.comm_times)
+
+
+def test_cache_stats_accessor():
+    wl = extract_workload(get_config("phi2-2b"),
+                          ParallelPlan(kind="fsdp", dp=8),
+                          seq=2048, global_batch=16, layers=2)
+    sim = Simulator(A40_NVLINK, seed=0)
+    tuner.tune_workload(sim, wl)
+    stats = sim.engine.cache_stats()
+    for section in ("measurements", "columns"):
+        for key in ("size", "hits", "misses", "evictions"):
+            assert isinstance(stats[section][key], int)
+    assert stats["columns"]["size"] > 0
+    assert stats["measurements"]["misses"] > 0
+    assert isinstance(stats["dedup_shared"], int)
+    # eviction counter moves under a tiny cache
+    small = Simulator(A40_NVLINK, cache_size=4)
+    g = _toy_group()
+    for n in range(1, 12):
+        small.profile_group(g, [CommConfig(nc=n)])
+    assert small.engine.cache_stats()["measurements"]["evictions"] > 0
+
+
+def test_step_search_protocol_guards():
+    class Empty(StepSearch):
+        def _search(self):
+            return
+            yield
+    s = Empty()
+    assert s.done and s.pending is None and s.requests == 0
+    with pytest.raises(RuntimeError):
+        s.feed([])
+
+
+def test_group_search_result_requires_completion():
+    g = _toy_group()
+    gs = tuner.GroupSearch(g, A40_NVLINK)
+    assert not gs.done and len(gs.pending) == 4      # subspace probes first
+    with pytest.raises(RuntimeError):
+        gs.result()
