@@ -1,5 +1,8 @@
-import json, glob, os, sys
-sys.path.insert(0, 'src'); sys.path.insert(0, '.')
+import json
+import os
+import sys
+sys.path.insert(0, 'src')
+sys.path.insert(0, '.')
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
 from benchmarks.roofline import analytic, load_dryrun
 
@@ -12,10 +15,12 @@ for pod, mp in (("pod1", False), ("pod2", True)):
     for a in ASSIGNED_ARCHS:
         for s in INPUT_SHAPES:
             d = load_dryrun(a, s, mp)
-            if d is None: print(f"| {a} | {s} | MISSING | | | | |"); continue
+            if d is None:
+                print(f"| {a} | {s} | MISSING | | | | |")
+                continue
             if d["status"] != "ok":
                 why = d.get("why","")[:40]
-                print(f"| {a} | {s} | skipped | — | — | — | — |")
+                print(f"| {a} | {s} | skipped: {why} | — | — | — | — |")
                 continue
             mem = d["memory"]["peak_bytes"]/2**30
             print(f"| {a} | {s} | ok | {mem:.2f} | {d.get('grad_accum','—')} | {d['collectives']['count']} | {d.get('lower_s',0)}+{d.get('compile_s',0)} |")
@@ -44,6 +49,7 @@ print("|---|---|---|")
 import glob as _g
 for p in sorted(_g.glob("experiments/dryrun/*_pod1_*.json")):
     d = json.load(open(p))
-    if d.get("status") != "ok": continue
+    if d.get("status") != "ok":
+        continue
     name = os.path.basename(p)[:-5]
     print(f"| {name} | {d['memory']['peak_bytes']/2**30:.2f} | {d['collectives']['count']} |")

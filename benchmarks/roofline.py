@@ -19,7 +19,6 @@ per chip.
 """
 from __future__ import annotations
 
-import glob
 import json
 import os
 from typing import Dict, Optional

@@ -9,8 +9,8 @@ superset; each family reads the subset it needs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 @dataclass(frozen=True)
@@ -126,7 +126,6 @@ class ModelConfig:
         top_k (+ shared) instead of all routed experts — the 6·N_active·D
         convention for MoE roofline."""
         d = self.d_model
-        n_attn_layers = self.num_layers
         p = 0
         # embeddings (+ untied head)
         p += self.vocab_size * d * (1 if self.tie_embeddings else 2)

@@ -13,7 +13,7 @@ in ``parallel.collectives`` and their chunk counts, then re-lowering.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict
 
 from repro.core.comm_params import CommConfig
 from repro.core.workload import ConfigSet, Workload

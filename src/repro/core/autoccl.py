@@ -21,7 +21,7 @@ unfinished group's next sample into one engine call per step.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 from repro.core.comm_params import CommConfig
 from repro.core.scheduler import (StepSearch, run_interleaved, run_serial,
@@ -101,12 +101,13 @@ def tune_workload(sim: Simulator, wl: Workload, *,
                   interleave: bool = True) -> Tuple[ConfigSet, int]:
     """Tune every overlap group; ``interleave=True`` (default) folds each
     unfinished group's next in-situ sample into one cross-group engine call
-    per step, and in deterministic mode structurally identical groups share
-    one descent (scheduler.run_shared).  Noise-free results are identical
-    to the serial walk."""
+    per step, and whenever sharing is sound (deterministic or CRN noise —
+    ``Simulator.can_share_trajectories``) structurally identical groups
+    share one descent (scheduler.run_shared).  Deterministic and CRN
+    results are identical to the serial walk."""
     from repro.core.profiling import group_fingerprint
 
-    if interleave and not sim.noise:
+    if interleave and sim.can_share_trajectories:
         per_group = run_shared(sim, wl.groups, AutoCCLSearch,
                                group_fingerprint)
     else:

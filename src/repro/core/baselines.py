@@ -1,7 +1,7 @@
 """Un-tuned baseline configurations (NCCL defaults / XLA defaults)."""
 from __future__ import annotations
 
-from repro.core.comm_params import CommConfig, vendor_default
+from repro.core.comm_params import vendor_default
 from repro.core.workload import ConfigSet, Workload
 
 

@@ -8,7 +8,7 @@ the benchmarks' sanity checks.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List
 
 from repro.core import contention as C
 from repro.core.comm_params import CommConfig

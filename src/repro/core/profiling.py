@@ -27,16 +27,30 @@ Two advance strategies share the tables:
      of float ops per event.  This is what the tuner's 3–5-candidate
      batches hit, and it is valid in BOTH noise modes because jitter
      multiplies the cached rates after assembly.
-  2. **Lock-step array advance** (large batches): all candidates' streams
-     advance together with NumPy array ops — per iteration, gather every
-     candidate's current-head durations, take the per-candidate ``min``
-     segment, retire heads.  The Python-level loop runs at most ~M+N times
-     regardless of batch size, so interpreter cost amortizes across the
-     candidate set (benchmark sweeps, exhaustive probes).  The advance is
-     HETEROGENEOUS: candidates may come from *different* overlap groups
-     (the cross-group scheduler's round-robin batches) — each candidate
-     carries its own (M, N) and its tables are padded to the batch maxima;
-     padding entries are never selected by the masked gathers.
+  2. **Lock-step array advance** (batches of ``_VECTOR_MIN`` or more): all
+     candidates' streams advance together with NumPy array ops — per
+     iteration, gather every candidate's current-head durations, take the
+     per-candidate ``min`` segment, retire heads.  The Python-level loop
+     runs at most ~M+N times regardless of batch size, so interpreter cost
+     amortizes across the candidate set.  The advance is HETEROGENEOUS:
+     candidates may come from *different* overlap groups (the cross-group
+     scheduler's round-robin batches) — each candidate carries its own
+     (M, N) and its tables are padded to the batch maxima; padding entries
+     are never selected by the masked gathers.  Table assembly is
+     GATHER-BASED: every cached column also lives in append-only id-indexed
+     stores (flat comm-duration arrays; one stacked comp matrix per group
+     structure), so a batch's padded tables are built with a handful of
+     fancy-index reads per distinct structure instead of per-candidate
+     row copies — per-candidate assembly was a large share of the fixed
+     cost that used to push the lock-step break-even near ~100 candidates
+     (see ``_VECTOR_MIN``).  The stores are append-only while batches are
+     in flight — gather ids must stay stable — and a key->id map that
+     survives LRU eviction lets a column recomputed after eviction reuse
+     its original rows (column values are deterministic functions of the
+     key).  When eviction churn grows the stores past twice the cache
+     bound they are compacted from the live cache at the next engine-call
+     boundary (``_maybe_compact_stores``), so ``cache_size`` keeps its
+     memory-cap contract.
 
 ``measure_many_grouped`` is the scheduler's entry point: a list of
 ``(group, cfg_lists)`` requests evaluated in one pass, sharing the
@@ -48,13 +62,18 @@ identical groups *before* submission, so in-tree the dedup mainly guards
 duplicate candidate lists inside one ``profile_many`` batch and direct
 ``run_interleaved`` users that skip sharing.)
 
-Noise-mode semantics: jitter multipliers are drawn from the *simulator's*
-RNG, one lognormal per comp then per comm, candidate-by-candidate in flat
-submission order (requests in order, candidates within a request in list
-order) — the identical stream the ``batched=False`` reference path
-consumes when it replays ``run_group`` per candidate in the same order,
-so noisy refactored call sites reproduce seed measurements exactly.
-Noisy mode never deduplicates: every submitted candidate is a fresh draw.
+Noise-mode semantics: every noisy candidate is one *submission* holding a
+counter-based ticket from the simulator's ``core.noise`` model (tickets
+issued in flat submission order: requests in order, candidates within a
+request in list order).  Jitter multipliers — one lognormal per comp then
+per comm — are a pure function of the ticket, so the engine draws a whole
+batch in one vectorized Philox read while the ``batched=False`` reference
+path re-derives bit-identical values per ``run_group`` call.  In CRN mode
+tickets are keyed per structural fingerprint and indexed per group
+trajectory (``core.noise`` docstring), which the cross-group scheduler
+exploits for trajectory sharing; the engine itself only forwards group
+identity to the ticket issue.  Noisy mode never deduplicates: every
+submitted candidate is its own submission.
 
 Cache-key semantics: the measurement-level LRU ``ProfileCache`` keys on a
 *structural* fingerprint of the group (op shapes/bytes; names excluded —
@@ -141,6 +160,33 @@ class ProfileCache:
                     evictions=self.evictions)
 
 
+class _GrowStore:
+    """Amortized-O(1) append + O(1) read view: a capacity-doubling ndarray
+    (1-D for scalars, 2-D for fixed-width rows).  Backs the gather stores
+    so registering a column never triggers a full-store rebuild — the
+    reallocation cost is amortized across appends, and ``view()`` is a
+    slice of the live buffer (taken fresh per batch; a view captured
+    before a reallocating append still reads correct values for every id
+    that existed when it was taken)."""
+
+    def __init__(self, width: Optional[int] = None):
+        self.n = 0
+        shape = (16,) if width is None else (16, width)
+        self._buf = np.empty(shape)
+
+    def append(self, row) -> int:
+        if self.n == len(self._buf):
+            grown = np.empty((2 * len(self._buf),) + self._buf.shape[1:])
+            grown[:self.n] = self._buf
+            self._buf = grown
+        self._buf[self.n] = row
+        self.n += 1
+        return self.n - 1
+
+    def view(self) -> np.ndarray:
+        return self._buf[:self.n]
+
+
 class _GroupKernel:
     """Per-(group structure, hardware) static arrays for the batched math."""
 
@@ -177,10 +223,13 @@ class BatchSimulator:
 
     # Batch size at which the lock-step array advance beats the scalar
     # column-cached replay.  The replay is a handful of float ops per event,
-    # so NumPy's per-op dispatch only amortizes on large batches (measured
-    # break-even ~96 candidates on CPU across group shapes); below it the
-    # flat replay loop wins even for cross-group batches.
-    _VECTOR_MIN = 96
+    # so NumPy's per-op dispatch only amortizes across a batch.  Gather-based
+    # table assembly (id stores, no per-candidate row copies) plus the
+    # saturating-head advance roughly halved the lock-step fixed cost, moving
+    # the measured CPU break-even from ~96 candidates (PR 2) to the ~48-64
+    # range across group shapes and load conditions; below it the flat
+    # replay loop still wins on per-op overhead.
+    _VECTOR_MIN = 48
 
     def __init__(self, sim, cache_size: int = 131072):
         self.sim = sim
@@ -191,6 +240,16 @@ class BatchSimulator:
         self._groups: Dict[int, Tuple] = {}        # id(group) -> (group, fpi)
         self._alone: Dict[int, Tuple] = {}         # fpi -> alone comp column
         self.dedup_shared = 0   # within-call duplicate candidates fanned out
+        # append-only gather stores backing the lock-step table assembly
+        # (module docstring): kid indexes the flat comm-duration arrays,
+        # rid the per-structure comp matrix.  kid 0 is a padding sentinel
+        # (1.0 durations, never selected by the masked gathers).
+        self._act = _GrowStore()
+        self._idle = _GrowStore()
+        self._act.append(1.0)
+        self._idle.append(1.0)
+        self._comp: Dict[int, _GrowStore] = {}          # fpi -> comp rows
+        self._col_ids: Dict[Tuple, Tuple[int, int]] = {}    # permanent id map
 
     # -- public API ------------------------------------------------------
     #
@@ -204,9 +263,11 @@ class BatchSimulator:
         logical profiles of a structurally repeated workload are hits)."""
         from repro.core.simulator import GroupMeasurement
 
+        self._maybe_compact_stores()
         fpi, kern = self._resolve(g)
         if self.sim.noise:
-            p = self._measure_one(kern, fpi, cfgs, True)
+            jit = self.sim._noise.draw(g, 1, kern.M + kern.N)[0]
+            p = self._measure_one(kern, fpi, cfgs, True, jit=jit)
             return GroupMeasurement(g.name, p[0], p[1], p[2],
                                     list(p[3]), list(p[4]))
         key = (fpi, tuple(map(_cfg_key, cfgs)))
@@ -240,6 +301,7 @@ class BatchSimulator:
         draw order is the flat submission order (module docstring)."""
         from repro.core.simulator import GroupMeasurement  # cycle-free late import
 
+        self._maybe_compact_stores()
         noisy = bool(self.sim.noise)
         cache = self.cache
         results: List[List] = [[None] * len(cfg_lists)
@@ -248,18 +310,24 @@ class BatchSimulator:
         keys: List = []             # cache key per todo entry (None if noisy)
         sinks: List[List] = []      # (request, slot) fan-outs per todo entry
         names: List[str] = []       # group name of the first submitter
+        specs: List[Tuple] = []     # noise ticket runs (key, first, n, M+N)
+        spans: List[Tuple] = []     # per run: (todo start, n, M, N)
         first: Dict[Tuple, int] = {}
         for ri, (g, cfg_lists) in enumerate(requests):
             if not cfg_lists:
                 continue
             fpi, kern = self._resolve(g)
-            for li, cfgs in enumerate(cfg_lists):
-                if noisy:                   # every candidate is a fresh draw
+            if noisy:                       # every candidate is a submission
+                key, start = self.sim._noise.reserve(g, len(cfg_lists))
+                specs.append((key, start, len(cfg_lists), kern.M + kern.N))
+                spans.append((len(todo), len(cfg_lists), kern.M, kern.N))
+                for li, cfgs in enumerate(cfg_lists):
                     todo.append((kern, fpi, cfgs))
                     keys.append(None)
                     sinks.append([(ri, li)])
                     names.append(g.name)
-                    continue
+                continue
+            for li, cfgs in enumerate(cfg_lists):
                 key = (fpi, tuple(map(_cfg_key, cfgs)))
                 gm = cache.get(key)
                 if gm is not None:
@@ -276,13 +344,24 @@ class BatchSimulator:
                 sinks.append([(ri, li)])
                 names.append(g.name)
         if todo:
+            # all runs' jitters in one pass — contiguous tickets (the whole
+            # batch, in default mode) come from a single vectorized draw
+            jit_mats = self.sim._noise.draw_reserved(specs) if noisy else None
             cols_list = self._gather_columns(todo)
             if len(todo) >= self._VECTOR_MIN:
-                payloads = self._measure_lockstep(todo, noisy, cols_list)
+                payloads = self._measure_lockstep(
+                    todo, noisy, cols_list,
+                    noise_blocks=(spans, jit_mats) if noisy else None)
             else:
-                payloads = [self._measure_one(kern, fpi, cfgs, noisy, cols)
-                            for (kern, fpi, cfgs), cols
-                            in zip(todo, cols_list)]
+                jrows: List = [None] * len(todo)
+                if noisy:
+                    for (t0, cnt, _, _), mat in zip(spans, jit_mats):
+                        for i in range(cnt):
+                            jrows[t0 + i] = mat[i]
+                payloads = [self._measure_one(kern, fpi, cfgs, noisy, cols,
+                                              jit=jrow)
+                            for (kern, fpi, cfgs), cols, jrow
+                            in zip(todo, cols_list, jrows)]
             for p, key, outs, name in zip(payloads, keys, sinks, names):
                 gm = GroupMeasurement(name, p[0], p[1], p[2],
                                       list(p[3]), list(p[4]))
@@ -323,14 +402,63 @@ class BatchSimulator:
             self._alone[fpi] = col
         return col
 
+    def _register_column(self, key: Tuple, fpi: int, act: float, idle: float,
+                         col_arr: np.ndarray) -> Tuple[int, int]:
+        """Append a freshly computed column to the gather stores; returns
+        its ``(kid, rid)`` ids.  Stores are append-only within an engine
+        call so ids stay valid for every in-flight batch (module
+        docstring).  The id map outlives LRU eviction of the cache entry,
+        so a column recomputed after eviction reuses its original rows
+        (column values are deterministic functions of the key); the
+        eviction-churn growth this implies is bounded by
+        ``_maybe_compact_stores`` at call boundaries."""
+        ids = self._col_ids.get(key)
+        if ids is not None:
+            return ids
+        kid = self._act.append(act)
+        self._idle.append(idle)
+        store = self._comp.get(fpi)
+        if store is None:
+            store = self._comp[fpi] = _GrowStore(width=col_arr.shape[0])
+        rid = store.append(col_arr)
+        self._col_ids[key] = (kid, rid)
+        return kid, rid
+
+    def _maybe_compact_stores(self) -> None:
+        """Rebuild the gather stores from the LIVE column cache once
+        eviction churn has grown them past twice the cache bound, so
+        ``cache_size`` keeps its memory-cap contract.  Ids are remapped,
+        which is only safe BETWEEN engine calls (per-batch ``cols_list``
+        snapshots hold ids) — the public measure paths call this before
+        resolving any column."""
+        if self._act.n <= 2 * self.columns.maxsize:
+            return
+        self._act = _GrowStore()
+        self._idle = _GrowStore()
+        self._act.append(1.0)
+        self._idle.append(1.0)
+        self._comp = {}
+        self._col_ids = {}
+        live = self.columns._d
+        for key in list(live):
+            col, act, idle, col_arr = live[key][:4]
+            kid, rid = self._register_column(key, key[0], act, idle, col_arr)
+            live[key] = (col, act, idle, col_arr, kid, rid)
+
+    def _comm_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self._act.view(), self._idle.view()
+
+    def _comp_matrix(self, fpi: int) -> np.ndarray:
+        return self._comp[fpi].view()
+
     def _column(self, fpi: int, kern: _GroupKernel, k: int, cfg: CommConfig):
         """(comp durations under cfg, comm-op-k duration active/idle, comp
-        durations as ndarray) — everything the replay needs about slot k
-        running ``cfg``.  Computed with the vectorized contention kernels
-        (bit-identical to the scalar model; tests assert ``==``).  The tuple
-        form feeds the scalar replay (tuple indexing is cheap in Python);
-        the ndarray twin feeds lock-step table assembly without a per-slice
-        tuple conversion."""
+        durations as ndarray, comm store id, comp store row id) —
+        everything the replay needs about slot k running ``cfg``.  Computed
+        with the vectorized contention kernels (bit-identical to the scalar
+        model; tests assert ``==``).  The tuple form feeds the scalar
+        replay (tuple indexing is cheap in Python); the ndarray twin and
+        the ids feed gather-based lock-step table assembly."""
         key = (fpi, k, _cfg_key(cfg))
         v = self.columns.get(key)
         if v is None:
@@ -345,10 +473,12 @@ class BatchSimulator:
             args = (op.bytes, wb, ns, cfg.nc, cfg.nt, cfg.chunk_kb,
                     ceil_, cmult, tmult)
             col = kern.comp_column(cfg, V, hw)
-            v = (col,
-                 float(C.comm_time_v(*args, hw, compute_active=True)),
-                 float(C.comm_time_v(*args, hw, compute_active=False)),
-                 np.array(col, dtype=np.float64))
+            act = float(C.comm_time_v(*args, hw, compute_active=True))
+            idle = float(C.comm_time_v(*args, hw, compute_active=False))
+            col_arr = np.array(col, dtype=np.float64)
+            kid, rid = self._register_column(key, fpi, act, idle,
+                                              col_arr)
+            v = (col, act, idle, col_arr, kid, rid)
             self.columns.put(key, v)
         return v
 
@@ -426,7 +556,9 @@ class BatchSimulator:
                     comp[i] = empty
         out: Dict[Tuple, Tuple] = {}
         for i, key in enumerate(need_keys):
-            v = (tuple(comp[i].tolist()), act[i], idle[i], comp[i])
+            kid, rid = self._register_column(key, need_fpi[i], act[i],
+                                              idle[i], comp[i])
+            v = (tuple(comp[i].tolist()), act[i], idle[i], comp[i], kid, rid)
             self.columns.put(key, v)
             out[key] = v
         return out
@@ -434,16 +566,18 @@ class BatchSimulator:
     # -- single-candidate replay over cached rate columns -----------------
     def _measure_one(self, kern: _GroupKernel, fpi: int,
                      cfgs: Sequence[CommConfig], noisy: bool,
-                     cols: Optional[List] = None) -> Tuple:
+                     cols: Optional[List] = None,
+                     jit: Optional[np.ndarray] = None) -> Tuple:
         M, N = kern.M, kern.N
         alone = self._alone_column(fpi, kern)[0]
         if cols is None:
             cols = [self._column(fpi, kern, k, cfg)
                     for k, cfg in enumerate(cfgs)]
         if noisy:
-            rng, s = self.sim._rng, self.sim.noise
-            jc = [float(rng.lognormal(0.0, s)) for _ in range(M)]
-            jk = [float(rng.lognormal(0.0, s)) for _ in range(N)]
+            # ``jit`` is this submission's ticket draw (M comp then N comm)
+            row = jit.tolist()
+            jc = row[:M]
+            jk = row[M:]
         else:
             jc = [1.0] * M
             jk = [1.0] * N
@@ -488,46 +622,64 @@ class BatchSimulator:
 
     # -- lock-step array advance for large batches ------------------------
     def _measure_lockstep(self, entries: Sequence[Tuple], noisy: bool,
-                          cols_list: Optional[List[List]] = None) -> List[Tuple]:
+                          cols_list: Optional[List[List]] = None,
+                          noise_blocks: Optional[Tuple] = None) -> List[Tuple]:
         """Advance a heterogeneous candidate batch in lock step.  Each entry
         is ``(kern, fpi, cfgs)`` — candidates may belong to different groups.
         Per-candidate tables are padded to the batch-wide (max M, max N);
         padding cells hold 1.0 and are never selected: the gathers clip
         indices to each candidate's own (M, N) and the ``where`` masks zero
-        any contribution from finished streams."""
+        any contribution from finished streams.  Tables are assembled by
+        gathering from the append-only id stores — a few fancy-index reads
+        per distinct group structure, no per-candidate row copies.  In
+        noisy mode ``noise_blocks`` carries the batch's pre-drawn ticket
+        jitters as ``(spans, matrices)`` with one ``(count, M + N)`` matrix
+        per contiguous same-group run."""
         Cn = len(entries)
         if cols_list is None:
             cols_list = self._gather_columns(entries)
         Ms = np.array([e[0].M for e in entries], dtype=np.int64)
         Ns = np.array([e[0].N for e in entries], dtype=np.int64)
         maxM, maxN = int(Ms.max()), int(Ns.max())
-        comp_dur = np.ones((Cn, max(maxM, 1), maxN + 1))
-        comm_act = np.ones((Cn, max(maxN, 1)))
-        comm_idle = np.ones((Cn, max(maxN, 1)))
+        # Tables carry one SATURATION row/column past the batch maxima so
+        # head indices never need clipping: a head that retires its last op
+        # stops at its own (M, N) — a valid index whose cells hold 1.0 (the
+        # kid-0 sentinel / the np.ones fill) and whose contributions are
+        # zeroed by the masks, while comm column N doubles as the alone
+        # column.  This removes per-iteration clip/where traffic and the
+        # M==0 / N==0 special cases from the advance loop.
+        pad = [0] * (maxN + 1)          # kid 0 = 1.0 sentinel
+        kid = np.array([[col[4] for col in cols] + pad[len(cols):]
+                        for cols in cols_list], dtype=np.intp)
+        act_arr, idle_arr = self._comm_arrays()
+        comm_act = act_arr[kid]
+        comm_idle = idle_arr[kid]
+        comp_dur = np.ones((Cn, maxM + 1, maxN + 1))
+        by_fpi: Dict[int, List[int]] = {}
         for c, (kern, fpi, cfgs) in enumerate(entries):
+            if kern.M:
+                by_fpi.setdefault(fpi, []).append(c)
+        for fpi, idx in by_fpi.items():
+            kern = self._kernels[fpi]
             M, N = kern.M, kern.N
-            for k, col in enumerate(cols_list[c]):
-                if M:
-                    comp_dur[c, :M, k] = col[3]
-                comm_act[c, k] = col[1]
-                comm_idle[c, k] = col[2]
-            if M:                   # column N = this candidate's alone rates
-                comp_dur[c, :M, N] = self._alone_column(fpi, kern)[1]
+            ii = np.array(idx, dtype=np.intp)
+            if N:
+                rid = np.array([[col[5] for col in cols_list[c]]
+                                for c in idx], dtype=np.intp)
+                # (n, N, M) gather -> (n, M, N) table block
+                comp_dur[ii, :M, :N] = \
+                    self._comp_matrix(fpi)[rid].transpose(0, 2, 1)
+            # column N = this structure's alone rates
+            comp_dur[ii, :M, N] = self._alone_column(fpi, kern)[1]
         if noisy:
-            # One flat draw covering the whole batch: numpy Generators fill
-            # sized draws sequentially, so this consumes the identical RNG
-            # stream a candidate-by-candidate loop of scalar draws would
-            # (run_group's order: per candidate, M comp then N comm).
-            draw = self.sim._rng.lognormal(0.0, self.sim.noise,
-                                           int((Ms + Ns).sum()))
-            jc = np.ones((Cn, max(maxM, 1)))
-            jk = np.ones((Cn, max(maxN, 1)))
-            off = 0
-            for c in range(Cn):
-                M, N = int(Ms[c]), int(Ns[c])
-                jc[c, :M] = draw[off:off + M]
-                jk[c, :N] = draw[off + M:off + M + N]
-                off += M + N
+            spans, mats = noise_blocks
+            jc = np.ones((Cn, maxM + 1))
+            jk = np.ones((Cn, maxN + 1))
+            for (t0, cnt, M, N), mat in zip(spans, mats):
+                if M:
+                    jc[t0:t0 + cnt, :M] = mat[:, :M]
+                if N:
+                    jk[t0:t0 + cnt, :N] = mat[:, M:]
             comp_dur = comp_dur * jc[:, :, None]
             comm_act = comm_act * jk
             comm_idle = comm_idle * jk
@@ -540,10 +692,8 @@ class BatchSimulator:
         t = np.zeros(Cn)
         comp_busy = np.zeros(Cn)
         comm_busy = np.zeros(Cn)
-        comp_meas = np.zeros((Cn, max(maxM, 1)))
-        comm_meas = np.zeros((Cn, max(maxN, 1)))
-        ci_max = np.maximum(Ms - 1, 0)
-        ki_max = np.maximum(Ns - 1, 0)
+        comp_meas = np.zeros((Cn, maxM + 1))
+        comm_meas = np.zeros((Cn, maxN + 1))
 
         guard = 0
         while True:
@@ -556,40 +706,30 @@ class BatchSimulator:
             if guard > 4 * (maxM + maxN) + 16:
                 raise RuntimeError("batched simulator did not converge")
 
-            ci_i = np.minimum(ci, ci_max)
-            ki_i = np.minimum(ki, ki_max)
-            d_comp = comp_dur[ar, ci_i, np.where(comm_on, ki_i, Ns)] if maxM \
-                else np.ones(Cn)
-            d_comm = np.where(comp_on, comm_act[ar, ki_i],
-                              comm_idle[ar, ki_i]) if maxN \
-                else np.ones(Cn)
+            # ki == N selects the alone column / a 1.0 pad cell; retired
+            # heads gather 1.0 durations so the masked updates divide by 1
+            d_comp = comp_dur[ar, ci, ki]
+            d_comm = np.where(comp_on, comm_act[ar, ki], comm_idle[ar, ki])
             rem_comp = np.where(comp_on, cur_comp * d_comp, np.inf)
             rem_comm = np.where(comm_on, cur_comm * d_comm, np.inf)
             dt = np.where(alive, np.minimum(rem_comp, rem_comm), 0.0)
             t += dt
 
-            if maxM:
-                dtc = np.where(comp_on, dt, 0.0)
-                comp_busy += dtc
-                comp_meas[ar, ci_i] += dtc
-                cur_comp = np.where(comp_on,
-                                    cur_comp - dt / np.where(comp_on, d_comp,
-                                                             1.0),
-                                    cur_comp)
-                fin = comp_on & (cur_comp <= _TINY)
-                ci = ci + fin
-                cur_comp = np.where(fin, 1.0, cur_comp)
-            if maxN:
-                dtk = np.where(comm_on, dt, 0.0)
-                comm_busy += dtk
-                comm_meas[ar, ki_i] += dtk
-                cur_comm = np.where(comm_on,
-                                    cur_comm - dt / np.where(comm_on, d_comm,
-                                                             1.0),
-                                    cur_comm)
-                fin = comm_on & (cur_comm <= _TINY)
-                ki = ki + fin
-                cur_comm = np.where(fin, 1.0, cur_comm)
+            dtc = np.where(comp_on, dt, 0.0)
+            comp_busy += dtc
+            comp_meas[ar, ci] += dtc
+            cur_comp = cur_comp - dtc / d_comp
+            fin = comp_on & (cur_comp <= _TINY)
+            ci = ci + fin
+            cur_comp = np.where(fin, 1.0, cur_comp)
+
+            dtk = np.where(comm_on, dt, 0.0)
+            comm_busy += dtk
+            comm_meas[ar, ki] += dtk
+            cur_comm = cur_comm - dtk / d_comm
+            fin = comm_on & (cur_comm <= _TINY)
+            ki = ki + fin
+            cur_comm = np.where(fin, 1.0, cur_comm)
 
         tl, xb, yb = t.tolist(), comm_busy.tolist(), comp_busy.tolist()
         km, cm = comm_meas.tolist(), comp_meas.tolist()

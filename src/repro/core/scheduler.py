@@ -37,9 +37,17 @@ classed by a caller-supplied key (the tuner passes the structural
 fingerprint), ONE search per class actually runs, and the duplicates'
 logical ProfileTime invocations are accounted on top — a stack of
 identical transformer layers tunes once, in lock-step, instead of
-re-walking the cache layer after layer.  Sharing is UNSOUND in noisy mode
-(each group's jitter draws legitimately diverge its trajectory), so noisy
-callers schedule one search per group.
+re-walking the cache layer after layer.
+
+The same purity argument extends to CRN noise (``Simulator(noise_mode=
+"crn")``): jitter is a pure function of ``(seed, structural fingerprint,
+trajectory position)`` (core.noise), so identical groups see identical
+noisy measurements at identical positions and their trajectories stay
+byte-equal — sharing is sound under jitter.  ``Simulator.
+can_share_trajectories`` is the authoritative predicate.  In default
+noise mode each submission is an independent draw and trajectories of
+identical groups legitimately diverge, so default-noisy callers schedule
+one search per group.
 
 Equivalence contract
 ====================
@@ -52,14 +60,21 @@ workload).  ``profile_count`` keeps PR 1's meaning of *logical*
 invocations: a shared trajectory increments it for every member group,
 exactly as the serial walk's per-layer cache hits did.
 
-Noisy mode: jitter is drawn per candidate in *flat submission order* —
-requests in the order the scheduler submits them (unfinished groups in
-group order, each group's batch in its internal order), candidates within
-a request in list order.  That order differs from the serial walk's, so
-noisy interleaved results may legitimately differ from noisy serial ones,
-but they are seed-reproducible: same seed + same workload -> same configs,
-identical between the batched engine and the ``batched=False`` reference
-path (which replays ``run_group`` in the same flat order).
+Default noisy mode: noise tickets are issued per candidate in *flat
+submission order* — requests in the order the scheduler submits them
+(unfinished groups in group order, each group's batch in its internal
+order), candidates within a request in list order.  That order differs
+from the serial walk's, so noisy interleaved results may legitimately
+differ from noisy serial ones, but they are seed-reproducible: same seed
++ same workload -> same configs, identical between the batched engine and
+the ``batched=False`` reference path (which re-derives each submission's
+ticket draws in the same flat order).
+
+CRN noisy mode: tickets are keyed per structural fingerprint and indexed
+per group trajectory, so results do NOT depend on the submission
+interleaving at all — serial, interleaved, and shared schedules return
+byte-identical configs, traces, and ``profile_count`` (asserted across
+the model zoo in tests/test_noise.py), exactly like deterministic mode.
 """
 from __future__ import annotations
 
@@ -126,12 +141,13 @@ def run_interleaved(sim, searches: Searches) -> int:
 
 def run_shared(sim, groups: Sequence[OverlapGroup], make_search,
                class_key) -> List[StepSearch]:
-    """Interleave with deterministic trajectory sharing: groups with equal
-    ``class_key(group)`` share one search (see module docstring — only
-    sound when measurements are deterministic).  Returns one search per
-    group, aligned with ``groups``; duplicates reference their class's
-    search.  Each duplicate's logical invocations are added to
-    ``sim.profile_count`` so accounting matches a serial walk exactly."""
+    """Interleave with trajectory sharing: groups with equal
+    ``class_key(group)`` share one search (see module docstring — sound
+    when ``sim.can_share_trajectories``: deterministic or CRN noise).
+    Returns one search per group, aligned with ``groups``; duplicates
+    reference their class's search.  Each duplicate's logical invocations
+    are added to ``sim.profile_count`` so accounting matches a serial walk
+    exactly."""
     classes: dict = {}
     reps: Searches = []
     order: List[StepSearch] = []

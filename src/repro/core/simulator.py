@@ -8,19 +8,26 @@ computation's instantaneous rate via the contention model, and vice versa
 ``profile(workload, configs) -> Measurement``.
 
 Optional multiplicative lognormal noise emulates real measurement jitter so
-the search algorithms cannot overfit exact model values.
+the search algorithms cannot overfit exact model values.  The jitter comes
+from counter-based Philox streams (``core.noise``): every noisy submission
+holds a ticket ``(stream key, submission index)`` and its multipliers are a
+pure function of that ticket, so the batched engine and the scalar
+reference path below consume bit-identical values.  ``noise_mode``
+selects the ticket policy — ``"default"`` (independent draws in flat
+submission order) or ``"crn"`` (common random numbers keyed on the group's
+structural fingerprint, which makes trajectory sharing sound under
+jitter); see the ``core.noise`` module docstring for the full contract.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
-
-import numpy as np
+from dataclasses import dataclass
+from typing import List, Tuple
 
 from repro.core import contention as C
 from repro.core.comm_params import CommConfig
 from repro.core.hardware import Hardware
+from repro.core.noise import NOISE_MODES, NoiseModel
 from repro.core.workload import ConfigSet, OverlapGroup, Workload
 
 
@@ -57,14 +64,29 @@ class Simulator:
     numerically identical — including the noise RNG stream."""
 
     def __init__(self, hw: Hardware, *, noise: float = 0.0, seed: int = 0,
-                 batched: bool = True, cache_size: int = 131072):
+                 noise_mode: str = "default", batched: bool = True,
+                 cache_size: int = 131072):
+        if noise_mode not in NOISE_MODES:
+            raise ValueError(
+                f"noise_mode must be one of {NOISE_MODES}, got {noise_mode!r}")
         self.hw = hw
         self.noise = noise
-        self._rng = np.random.default_rng(seed)
+        self.seed = seed
+        self.noise_mode = noise_mode
+        self._noise = NoiseModel(seed, noise, noise_mode) if noise else None
         self.profile_count = 0     # tuning-efficiency accounting (Fig. 8c)
         self.batched = batched
         self._cache_size = cache_size
         self._engine = None
+
+    @property
+    def can_share_trajectories(self) -> bool:
+        """Whether structurally identical groups provably walk identical
+        search trajectories, i.e. measurements are pure functions of
+        (structure, configs, trajectory position): true noise-free and in
+        CRN mode (fingerprint-keyed draws) — the soundness condition for
+        ``scheduler.run_shared``."""
+        return not self.noise or self.noise_mode == "crn"
 
     @property
     def engine(self):
@@ -79,8 +101,13 @@ class Simulator:
     def run_group(self, g: OverlapGroup, cfgs: List[CommConfig]) -> GroupMeasurement:
         assert len(cfgs) == len(g.comms)
         hw = self.hw
-        jit = (lambda: float(self._rng.lognormal(0.0, self.noise))) if self.noise \
-            else (lambda: 1.0)
+        if self.noise:
+            # one ticket per submission; jitters are a pure function of it
+            jit_comp, jit_comm = self._noise.group_jitters(
+                g, len(g.comps), len(g.comms))
+        else:
+            jit_comp = [1.0] * len(g.comps)
+            jit_comm = [1.0] * len(g.comms)
 
         # remaining work is tracked in fractions of each op
         comp_left = [1.0] * len(g.comps)
@@ -88,8 +115,6 @@ class Simulator:
         comp_busy = comm_busy = 0.0
         comm_meas = [0.0] * len(g.comms)
         comp_meas = [0.0] * len(g.comps)
-        jit_comp = [jit() for _ in g.comps]
-        jit_comm = [jit() for _ in g.comms]
         ci = ki = 0                 # heads of comp / comm streams
         t = 0.0
         guard = 0

@@ -14,12 +14,13 @@ ProfileTime plumbing: the whole search is a resumable step machine
 candidate batch — subspace probes, per-dial growth candidates, bisection
 midpoints — and consumes the measurements fed back.  ``tune_group`` drives
 one machine to completion through ``Simulator.profile_many`` (the serial
-walk, bit-identical to the seed's per-call event loop including the noise
-RNG stream); ``tune_workload`` round-robins every group's pending batch
-into one cross-group ``profile_many_grouped`` call per step
-(``interleave=True``, the engine-aware default), which in deterministic
-mode produces configs, traces, and ``profile_count`` identical to the
-serial walk.  ``profile_count`` still counts logical invocations.
+walk, bit-identical to the ``batched=False`` reference event loop
+including the counter-based noise stream, core.noise); ``tune_workload``
+round-robins every group's pending batch into one cross-group
+``profile_many_grouped`` call per step (``interleave=True``, the
+engine-aware default), which in deterministic and CRN-noise modes
+produces configs, traces, and ``profile_count`` identical to the serial
+walk.  ``profile_count`` still counts logical invocations.
 """
 from __future__ import annotations
 
@@ -209,9 +210,9 @@ class GroupSearch(StepSearch):
                 cfgs = [states[i].cfg for i in range(n)]
                 cand_lists = []
                 for _, c in cands:
-                    l = list(cfgs)
-                    l[j] = c
-                    cand_lists.append(l)
+                    cl = list(cfgs)
+                    cl[j] = c
+                    cand_lists.append(cl)
                 best = None                         # step the best dial
                 for (_, c), m in zip(cands, (yield cand_lists)):
                     if best is None or m.Z < best[1].Z:
@@ -303,15 +304,19 @@ def tune_workload(sim: Simulator, wl: Workload, *,
                   interleave: bool = True) -> Tuple[ConfigSet, int, List[Dict]]:
     """Tune every overlap group; groups are independent (their comms only
     contend within their own window), so their searches interleave into one
-    cross-group engine call per step by default — and in deterministic mode
-    structurally identical groups share one trajectory outright
-    (scheduler.run_shared).  ``interleave=False`` restores the serial group
-    walk; in deterministic mode both schedules return identical configs,
-    traces, and ``profile_count``."""
+    cross-group engine call per step by default — and whenever trajectory
+    sharing is sound (deterministic mode, or CRN noise: see
+    ``Simulator.can_share_trajectories``) structurally identical groups
+    share one trajectory outright (scheduler.run_shared).
+    ``interleave=False`` restores the serial group walk; in deterministic
+    and CRN modes both schedules return identical configs, traces, and
+    ``profile_count``."""
     from repro.core.profiling import group_fingerprint
 
-    make = lambda g: GroupSearch(g, sim.hw, base=base, warm_start=warm_start)
-    if interleave and not sim.noise:
+    def make(g):
+        return GroupSearch(g, sim.hw, base=base, warm_start=warm_start)
+
+    if interleave and sim.can_share_trajectories:
         per_group = run_shared(sim, wl.groups, make, group_fingerprint)
     else:
         searches = [(g, make(g)) for g in wl.groups]

@@ -11,7 +11,6 @@ The model code always calls these wrappers; the dry-run path uses "chunked"
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -58,7 +58,9 @@ def wkv6_chunked_ref(r, k, v, w_log, u, state=None, *, chunk: int = 64):
     assert S % chunk == 0, "pad sequence to a chunk multiple"
     Q = chunk
     n = S // Q
-    rs = (lambda a: jnp.moveaxis(a.reshape(B, n, Q, H, K), 1, 0).astype(jnp.float32))
+    def rs(a):
+        return jnp.moveaxis(a.reshape(B, n, Q, H, K), 1, 0).astype(jnp.float32)
+
     rf, kf, vf, wf = rs(r), rs(k), rs(v), rs(w_log)
     uf = u.astype(jnp.float32)
     if state is None:
@@ -138,7 +140,9 @@ def ssd_chunked_ref(x, dt, A, Bm, Cm, D, state=None, *, chunk: int = 64):
     N = Bm.shape[-1]
     assert S % chunk == 0
     Q, n = chunk, S // chunk
-    mv = (lambda a: jnp.moveaxis(a.reshape((B_, n, Q) + a.shape[2:]), 1, 0).astype(jnp.float32))
+    def mv(a):
+        return jnp.moveaxis(a.reshape((B_, n, Q) + a.shape[2:]), 1, 0).astype(jnp.float32)
+
     xc, dtc, Bc, Cc = mv(x), mv(dt), mv(Bm), mv(Cm)
     Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
     if state is None:

@@ -11,8 +11,7 @@ VMEM per grid step (Q=64, P=64, N=64 fp32): x/B/C blocks 3·Q·max(P,N)
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

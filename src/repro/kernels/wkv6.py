@@ -16,7 +16,7 @@ VMEM budget per grid step (Q=32, K=V=64, fp32):
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ values; ``overrides`` compose via ModelConfig.replace.
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import ModelConfig

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, get_config, shape_applicable
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, shape_applicable
 from repro.launch.mesh import make_mesh, make_production_mesh, mesh_axes
 from repro.launch.specs import decode_input_specs, input_specs, param_specs_shapes
 from repro.models import model as M
@@ -118,7 +118,7 @@ def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
         "arch": arch, "shape": shape_name,
         "mesh": "x".join(map(str, mesh.devices.shape)),
         "multi_pod": multi_pod, "dtype": dtype,
-        "params": int(sum(np.prod(l.shape) for l in jax.tree.leaves(p_shapes))),
+        "params": int(sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(p_shapes))),
         "tags": extra_tags,
     }
 

@@ -39,7 +39,6 @@ def decode_input_specs(cfg, shape, cache_dtype=None) -> Dict[str, Any]:
 
 def param_specs_shapes(cfg, *, ep_pad: int = 1):
     """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
-    rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     return jax.eval_shape(
         lambda r: M.init_params(cfg, r, ep_pad=ep_pad),
         jax.ShapeDtypeStruct((2,), jnp.uint32))

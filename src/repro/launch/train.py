@@ -10,12 +10,9 @@ real TPU pods the same flags apply, device count comes from the runtime).
 from __future__ import annotations
 
 import argparse
-import os
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticCorpus

@@ -86,12 +86,12 @@ def init_trunk(key, cfg, *, ep_pad: int = 1, dtype=jnp.float32) -> Params:
 
 def _run_segment(stacked: Params, cfg, x, positions, caches, *, use_moe: bool,
                  remat: bool) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
-    body = partial(layer_fwd, cfg=cfg, positions=positions, use_moe=use_moe)
-
     if caches is None:
         def scan_fn(carry, lp):
             x, aux = carry
-            fn = (lambda q, v: layer_fwd(q, cfg, v, positions, None, use_moe=use_moe))
+            def fn(q, v):
+                return layer_fwd(q, cfg, v, positions, None, use_moe=use_moe)
+
             if remat:
                 fn = jax.checkpoint(fn)
             x, _, a = fn(lp, x)

@@ -10,7 +10,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.kernels import ops as K
 from repro.models import layers as L

@@ -12,7 +12,6 @@ plus "frames" (B,enc_seq,D) for audio and "patches" (B,n_patch,D) for vlm
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -138,7 +138,9 @@ def trunk_fwd(p: Params, cfg, x, positions=None, caches=None, *,
               remat: bool = False, backend: Optional[str] = None):
     def scan_fn(x, xs):
         if caches is None:
-            fn = lambda q, v: layer_fwd(q, cfg, v, None, backend)
+            def fn(q, v):
+                return layer_fwd(q, cfg, v, None, backend)
+
             if remat:
                 fn = jax.checkpoint(fn)
             x, _ = fn(xs, x)

@@ -8,7 +8,7 @@ cross-attention to the encoder memory.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +91,9 @@ def decode_trunk(p: Params, cfg, x, memory, positions, caches=None, *,
                  remat: bool = False):
     def fn(x, xs):
         if caches is None:
-            f = lambda q, v: dec_layer_fwd(q, cfg, v, memory, positions, None)
+            def f(q, v):
+                return dec_layer_fwd(q, cfg, v, memory, positions, None)
+
             if remat:
                 f = jax.checkpoint(f)
             x2, _ = f(xs, x)

@@ -95,7 +95,9 @@ def trunk_fwd(p: Params, cfg, x, positions, caches=None, *,
     def mamba_scan(x, stacked, stacked_cache):
         def fn(x, xs):
             if stacked_cache is None:
-                f = lambda q, v: mamba_layer_fwd(q, cfg, v, None, backend)
+                def f(q, v):
+                    return mamba_layer_fwd(q, cfg, v, None, backend)
+
                 if remat:
                     f = jax.checkpoint(f)
                 x2, _ = f(xs, x)

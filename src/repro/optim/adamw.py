@@ -7,7 +7,7 @@ training keeps a float32 master view implicitly via the update math).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,9 @@ class AdamWConfig:
 
 
 def init_state(params) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return {"mu": jax.tree.map(zeros, params),
             "nu": jax.tree.map(zeros, params),
             "count": jnp.zeros((), jnp.int32)}

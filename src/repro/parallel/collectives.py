@@ -22,12 +22,11 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:                                  # jax >= 0.5 exports it at top level
     from jax import shard_map
@@ -73,7 +72,6 @@ def _ring_ag_matmul_local(x, w, *, axis: str, num_chunks: int):
     def chunked_mm(xs):
         if num_chunks <= 1 or Tl % num_chunks:
             return xs @ w
-        c = Tl // num_chunks
         blocks = jnp.stack(jnp.split(xs, num_chunks, axis=-2))
         ys = lax.map(lambda b: b @ w, blocks)
         return jnp.concatenate(list(ys), axis=-2)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax import lax

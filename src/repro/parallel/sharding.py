@@ -19,7 +19,7 @@ A rule's spec matches the *trailing* dims of the array; extra leading dims
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import numpy as np

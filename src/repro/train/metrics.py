@@ -6,7 +6,7 @@ the MaxText/PaLM convention; hardware peaks default to TPU v5e.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 TPU_V5E_PEAK = 197e12
 

@@ -10,7 +10,8 @@ import pytest
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.launch.mesh import make_test_mesh
 from repro.parallel.collectives import mm_reduce_scatter, chunked_all_to_all

@@ -1,8 +1,6 @@
 """Continuous-batching engine: per-slot positions, ragged prompts, refill."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import model as M

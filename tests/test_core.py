@@ -9,7 +9,7 @@ from repro.core import (A40_NVLINK, A40_PCIE, TPU_V5E, CommConfig, ParallelPlan,
 from repro.core import autoccl, contention, cost_model, tuner
 from repro.core.baselines import nccl_defaults
 from repro.core.priority import metric_h
-from repro.core.workload import CommOp, CompOp, OverlapGroup, Workload, matmul_comp
+from repro.core.workload import CommOp, matmul_comp
 
 
 def _fsdp_workload(model="phi2-2b", dp=8, layers=4):

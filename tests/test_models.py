@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_smoke_config
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
 from repro.models import model as M
 
 # Every test here XLA-compiles a full (reduced) model — 3-12s per arch x

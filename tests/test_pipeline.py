@@ -9,7 +9,8 @@ import pytest
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from repro.parallel.pipeline import pipeline_apply
 from repro.launch.mesh import make_test_mesh
 

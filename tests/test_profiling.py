@@ -8,7 +8,7 @@ import pytest
 from repro.core import (A40_NVLINK, A40_PCIE, TPU_V5E, CommConfig,
                         ParallelPlan, Simulator, extract_workload)
 from repro.core import autoccl, contention, tuner
-from repro.core.profiling import BatchSimulator, ProfileCache, group_fingerprint
+from repro.core.profiling import ProfileCache, group_fingerprint
 from repro.core.workload import CommOp, OverlapGroup, matmul_comp
 
 HWS = (A40_NVLINK, A40_PCIE, TPU_V5E)
@@ -50,7 +50,7 @@ def test_batched_equals_sequential_exact():
         lists = [[_rand_cfg(rng) for _ in g.comms]
                  for _ in range(int(rng.integers(1, 6)))]
         sim = Simulator(hw)
-        seq = [sim.run_group(g, l) for l in lists]
+        seq = [sim.run_group(g, cl) for cl in lists]
         bat = sim.engine.measure_many(g, lists)
         assert all(_same(s, b) for s, b in zip(seq, bat))
 
@@ -63,7 +63,7 @@ def test_lockstep_large_batch_equals_sequential_exact():
     lists = [[_rand_cfg(rng) for _ in g.comms] for _ in range(120)]
     sim = Simulator(A40_NVLINK)
     assert len(lists) >= sim.engine._VECTOR_MIN
-    seq = [sim.run_group(g, l) for l in lists]
+    seq = [sim.run_group(g, cl) for cl in lists]
     bat = sim.engine.measure_many(g, lists)
     assert all(_same(s, b) for s, b in zip(seq, bat))
 
@@ -75,7 +75,7 @@ def test_noisy_mode_reproduces_sequential_rng_stream():
         lists = [[_rand_cfg(rng) for _ in g.comms] for _ in range(3)]
         s_seq = Simulator(A40_NVLINK, noise=0.02, seed=trial, batched=False)
         s_bat = Simulator(A40_NVLINK, noise=0.02, seed=trial)
-        seq = [s_seq.profile_group(g, l) for l in lists]
+        seq = [s_seq.profile_group(g, cl) for cl in lists]
         bat = s_bat.profile_many(g, lists)
         assert all(_same(s, b) for s, b in zip(seq, bat))
         assert s_seq.profile_count == s_bat.profile_count == 3
@@ -92,7 +92,7 @@ def test_noisy_lockstep_large_batch_reproduces_rng_stream():
     s_seq = Simulator(A40_NVLINK, noise=0.02, seed=9, batched=False)
     s_bat = Simulator(A40_NVLINK, noise=0.02, seed=9)
     assert len(lists) >= s_bat.engine._VECTOR_MIN
-    seq = [s_seq.profile_group(g, l) for l in lists]
+    seq = [s_seq.profile_group(g, cl) for cl in lists]
     bat = s_bat.profile_many(g, lists)
     assert all(_same(s, b) for s, b in zip(seq, bat))
 
@@ -217,6 +217,29 @@ def test_noisy_mode_bypasses_measurement_cache():
     m2 = sim.profile_group(g, [cfg])
     assert len(sim.engine.cache) == 0              # never filled
     assert m1.Z != m2.Z                            # fresh jitter draw
+
+
+def test_gather_stores_compact_under_eviction_churn():
+    """The append-only gather stores must not defeat ``cache_size``'s
+    memory bound: once eviction churn grows them past twice the column
+    cache bound they compact from the live cache at the next engine call,
+    and measurements stay exact across the id remap."""
+    g = OverlapGroup("g", comps=[matmul_comp("m", 1024, 512, 2048)],
+                     comms=[CommOp("c", "allgather", 3e7, 8)])
+    sim = Simulator(A40_NVLINK, cache_size=8)
+    cfgs = [CommConfig(nc=1 + i % 30, chunk_kb=64 + 8 * (i // 30 + i % 30))
+            for i in range(60)]
+    first = [sim.profile_group(g, [c]) for c in cfgs]
+    # churn pushed ~60 distinct columns through an 8-entry LRU; the stores
+    # stay within 2x the cache bound (+1 sentinel, +1 in-call append)
+    assert sim.engine._act.n <= 2 * 8 + 2
+    again = [sim.profile_group(g, [c]) for c in cfgs]
+    assert all(_same(a, b) for a, b in zip(first, again))
+    # lock-step gathers stay exact right after a compaction remap
+    bat = sim.engine.measure_many(g, [[c] for c in cfgs] * 2)
+    ref = Simulator(A40_NVLINK, batched=False)
+    assert all(_same(ref.run_group(g, cl), m)
+               for cl, m in zip([[c] for c in cfgs] * 2, bat))
 
 
 def test_lru_eviction_keeps_results_exact():

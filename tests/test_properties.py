@@ -15,7 +15,7 @@ from repro.core.comm_params import (C_MAX_KB, C_MIN_KB, NC_MAX, NC_MIN,
                                     CommConfig, min_config)
 from repro.core.hardware import A40_NVLINK, A40_PCIE, TPU_V5E
 from repro.core.simulator import Simulator
-from repro.core.workload import CommOp, CompOp, OverlapGroup, matmul_comp
+from repro.core.workload import CommOp, OverlapGroup, matmul_comp
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 
 HW = st.sampled_from([A40_NVLINK, A40_PCIE, TPU_V5E])

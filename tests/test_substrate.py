@@ -1,11 +1,9 @@
 """Substrate: optimizer, schedules, checkpointing, trainer, serving engine."""
-import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticCorpus
