@@ -3,8 +3,7 @@ communications — Lagom's profile count grows linearly (≈2× AutoCCL's
 single-comm count for a 2-comm overlap, per the paper)."""
 from __future__ import annotations
 
-from repro.core import A40_NVLINK, Simulator
-from repro.core import autoccl, tuner
+from repro.core import A40_NVLINK, Workload, tune
 from repro.core.workload import CommOp, OverlapGroup, matmul_comp
 
 
@@ -19,13 +18,13 @@ def _group(n_comms: int):
 def run():
     rows = []
     for n in (1, 2, 4, 8):
-        g = _group(n)
-        lag = tuner.tune_group(Simulator(A40_NVLINK, noise=0.01, seed=0), g)
-        sim2 = Simulator(A40_NVLINK, noise=0.01, seed=1)
-        _, ac_iters = autoccl.tune_group(sim2, g)
+        wl = Workload(f"g{n}", [_group(n)])
+        lag = tune(wl, A40_NVLINK, noise=0.01, seed=0)
+        ac = tune(wl, A40_NVLINK, method="autoccl", noise=0.01, seed=1)
         rows.append(dict(table="fig8c", n_comms=n,
-                         lagom_iters=lag.iterations, autoccl_iters=ac_iters,
-                         lagom_per_comm=lag.iterations / n))
+                         lagom_iters=lag.profile_count,
+                         autoccl_iters=ac.profile_count,
+                         lagom_per_comm=lag.profile_count / n))
     return rows
 
 

@@ -6,9 +6,7 @@ from __future__ import annotations
 
 from repro.configs import get_config
 from repro.core import (A40_NVLINK, A40_PCIE, ParallelPlan, Simulator,
-                        extract_workload)
-from repro.core import autoccl, tuner
-from repro.core.baselines import nccl_defaults
+                        extract_workload, tune)
 
 # (model, plan, seq, global_batch) — Table 2
 FSDP_WORKLOADS = [
@@ -31,18 +29,30 @@ TP_EP_WORKLOADS = [
 def _bench(model, plan, seq, gbs, hw, layers=None):
     cfg = get_config(model)
     wl = extract_workload(cfg, plan, seq=seq, global_batch=gbs, layers=layers)
-    sim = Simulator(hw, noise=0.01, seed=0)
-    base = sim.profile(wl, nccl_defaults(wl, hw))
-    lag_cfgs, lag_iters, _ = tuner.tune_workload(sim, wl)
-    lag = sim.profile(wl, lag_cfgs)
-    ac_cfgs, ac_iters = autoccl.tune_workload(Simulator(hw, noise=0.01, seed=1), wl)
-    ac = sim.profile(wl, ac_cfgs)
+    # one tune() per strategy; each makespan measured on a FRESH CRN
+    # simulator with one seed — CRN jitter is a pure function of
+    # (structure, trajectory position), so the three evaluations see
+    # identical draws and differ only by their configs (true common
+    # random numbers; a shared default-noise sim would give independent
+    # draws per evaluation)
+    plans = dict(
+        nccl=tune(wl, hw, method="nccl"),
+        lagom=tune(wl, hw, method="lagom", noise=0.01, seed=0),
+        autoccl=tune(wl, hw, method="autoccl", noise=0.01, seed=1))
+
+    def ev():
+        return Simulator(hw, noise=0.01, seed=0, noise_mode="crn")
+
+    z = {name: p.evaluate(wl, sim=ev()).Z for name, p in plans.items()}
     return dict(model=model, parallelism=plan.kind,
                 world=plan.world, cluster=hw.name,
-                nccl_ms=base.Z * 1e3, autoccl_ms=ac.Z * 1e3, lagom_ms=lag.Z * 1e3,
-                lagom_vs_nccl=base.Z / lag.Z, lagom_vs_autoccl=ac.Z / lag.Z,
-                autoccl_vs_nccl=base.Z / ac.Z,
-                lagom_profiles=lag_iters, autoccl_profiles=ac_iters)
+                nccl_ms=z["nccl"] * 1e3, autoccl_ms=z["autoccl"] * 1e3,
+                lagom_ms=z["lagom"] * 1e3,
+                lagom_vs_nccl=z["nccl"] / z["lagom"],
+                lagom_vs_autoccl=z["autoccl"] / z["lagom"],
+                autoccl_vs_nccl=z["nccl"] / z["autoccl"],
+                lagom_profiles=plans["lagom"].profile_count,
+                autoccl_profiles=plans["autoccl"].profile_count)
 
 
 def run(fast: bool = False):

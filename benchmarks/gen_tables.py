@@ -1,8 +1,10 @@
+"""Markdown tables from the dry-run/roofline artifacts.
+
+    PYTHONPATH=src python -m benchmarks.gen_tables
+"""
 import json
 import os
-import sys
-sys.path.insert(0, 'src')
-sys.path.insert(0, '.')
+
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES
 from benchmarks.roofline import analytic, load_dryrun
 

@@ -2,6 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
 
+(``pyproject.toml`` puts ``src`` on the path for pytest only; console runs
+set ``PYTHONPATH=src`` — no in-module ``sys.path`` surgery.)
+
 Prints the ``name,value,derived`` headline CSV (one row per paper claim)
 and writes the full per-config tables to experiments/bench/<name>.csv.
 """
@@ -10,10 +13,7 @@ from __future__ import annotations
 import argparse
 import csv
 import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 

@@ -25,8 +25,9 @@ inside the measured time — the honest end-to-end cost):
      serial walk on every run, and ``engine.cache_stats()`` telemetry is
      reported for every noisy row.
 
-Run directly (``python benchmarks/tuning_throughput.py [--fast] [--seed N]
-[--no-noisy]``) the equality and speedup-floor assertions double as the CI
+Run directly (``PYTHONPATH=src python -m benchmarks.tuning_throughput
+[--fast] [--seed N] [--no-noisy]``) the equality and speedup-floor
+assertions double as the CI
 engine-regression smoke (the fast lane uses ``--fast``: fewer reps, trimmed
 workloads, and conservative floors — 1.3x best-interleave, 2x best-CRN —
 so shared-runner jitter cannot flake the lane while a real scheduling or
@@ -37,12 +38,8 @@ it).  The scheduled benchmark lane runs the full sweep and uploads the
 from __future__ import annotations
 
 import argparse
-import os
-import sys
 import time
 from functools import partial
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
 from repro.core import ParallelPlan, Simulator, TPU_V5E, extract_workload
@@ -69,15 +66,15 @@ def _best_of(make_a, call_a, make_b, call_b, reps):
     return min(t_a), min(t_b), r_a, r_b, sim_b
 
 
-def _tune(wl, interleave=True):
+def _tune(wl, mode="interleaved"):
     def call(sim):
-        return tuner.tune_workload(sim, wl, interleave=interleave)
+        return tuner.search_workload(sim, wl, mode=mode)
     return call
 
 
-def _tune_autoccl(wl, interleave=True):
+def _tune_autoccl(wl, mode="interleaved"):
     def call(sim):
-        return autoccl.tune_workload(sim, wl, interleave=interleave)
+        return autoccl.search_workload(sim, wl, mode=mode)
     return call
 
 
@@ -121,9 +118,9 @@ def run(fast: bool = False, seed: int = 0, noisy: bool = True):
     # -- 1. engine vs sequential event loop (PR 1 regression guard) -------
     ll = workloads[2][1]
     for noise in noises:
-        scenarios = [("lagom", _tune(ll, interleave=False))]
+        scenarios = [("lagom", _tune(ll, mode="serial"))]
         if noise:       # AutoCCL samples in-situ, i.e. always with jitter
-            scenarios.append(("autoccl", _tune_autoccl(ll, interleave=False)))
+            scenarios.append(("autoccl", _tune_autoccl(ll, mode="serial")))
         for tname, call in scenarios:
             t_seq, t_bat, r_seq, r_bat, sim_b = _best_of(
                 sim_of(noise, seed, batched=False), call,
@@ -149,7 +146,7 @@ def run(fast: bool = False, seed: int = 0, noisy: bool = True):
         reps_w = reps * 3 if len(wl.groups) < 20 else reps
         for noise in noises:
             t_ser, t_int, r_ser, r_int, sim_i = _best_of(
-                sim_of(noise, seed), _tune(wl, interleave=False),
+                sim_of(noise, seed), _tune(wl, mode="serial"),
                 sim_of(noise, seed), _tune(wl), reps_w)
             if not noise:
                 # acceptance: byte-identical configs/traces/profile_count
@@ -180,7 +177,7 @@ def run(fast: bool = False, seed: int = 0, noisy: bool = True):
                 sim_of(0.01, seed, mode="crn"), _tune(wl), reps_w)
             # acceptance: CRN trajectory sharing is a pure re-scheduling —
             # shared interleaved results byte-identical to the serial walk
-            crn_serial = _tune(wl, interleave=False)(
+            crn_serial = _tune(wl, mode="serial")(
                 sim_of(0.01, seed, mode="crn")())
             assert r_crn == crn_serial, \
                 f"{wname}: CRN sharing changed tuning results"
@@ -210,7 +207,7 @@ def run(fast: bool = False, seed: int = 0, noisy: bool = True):
     ds = workloads[1][1]
     for noise in noises:
         t_ser, t_int, a_ser, a_int, _ = _best_of(
-            sim_of(noise, seed + 1), _tune_autoccl(ds, interleave=False),
+            sim_of(noise, seed + 1), _tune_autoccl(ds, mode="serial"),
             sim_of(noise, seed + 1), _tune_autoccl(ds), reps)
         if not noise:
             assert a_ser == a_int, "autoccl interleaved changed results"

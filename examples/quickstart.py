@@ -1,38 +1,56 @@
-"""Quickstart: tune a training iteration's collectives with Lagom.
+"""Quickstart: one front door — tune, persist the plan, reload, re-apply.
 
-Builds the Llama-3-8B FSDP workload from the paper's Table 2, profiles it
-under NCCL defaults, AutoCCL, and Lagom, and prints the end-to-end speedups
-(reproducing the Fig. 7a comparison for one model).
+Builds the Llama-3-8B FSDP workload from the paper's Table 2, tunes it
+with every registered method through ``repro.core.tune`` (NCCL defaults /
+AutoCCL / Lagom — the Fig. 7a comparison for one model), then shows the
+paper's actual deployment story: the tuned result is a portable
+``TunedPlan`` artifact that survives JSON round-trips, refuses structurally
+mismatched workloads, and lowers itself to JAX collective runtime knobs.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
+
 from repro.configs import get_config
-from repro.core import (A40_NVLINK, ParallelPlan, Simulator, extract_workload)
-from repro.core import autoccl, tuner
-from repro.core.baselines import nccl_defaults
+from repro.core import (A40_NVLINK, ParallelPlan, TunedPlan,
+                        extract_workload, tune)
 
 cfg = get_config("llama3-8b")
-plan = ParallelPlan(kind="fsdp", dp=8)
-wl = extract_workload(cfg, plan, seq=2048, global_batch=16)
+wl = extract_workload(cfg, ParallelPlan(kind="fsdp", dp=8), seq=2048,
+                      global_batch=16)
 hw = A40_NVLINK
 print(f"workload: {wl.name} — {len(wl.groups)} overlap groups, "
       f"{wl.num_comms} tunable collectives")
 
-sim = Simulator(hw, noise=0.01, seed=0)
-base = sim.profile(wl, nccl_defaults(wl, hw))
-print(f"NCCL default : Z = {base.Z*1e3:8.2f} ms   (X={base.X*1e3:.1f}, Y={base.Y*1e3:.1f})")
+# 1. tune once per method — every method returns the same artifact type
+base = tune(wl, hw, method="nccl")
+ac = tune(wl, hw, method="autoccl", noise=0.01, seed=1)
+lag = tune(wl, hw, method="lagom", noise=0.01, seed=0)
 
-ac_cfgs, ac_iters = autoccl.tune_workload(Simulator(hw, noise=0.01, seed=1), wl)
-ac = sim.profile(wl, ac_cfgs)
-print(f"AutoCCL      : Z = {ac.Z*1e3:8.2f} ms   ({base.Z/ac.Z:.3f}x vs NCCL, "
-      f"{ac_iters} profiles)")
+# 2. compare — the speedup rows the benchmarks print
+row = ac.compare(base, wl)
+print(f"AutoCCL      : Z = {row['z_ms']:8.2f} ms   "
+      f"({row['speedup']:.3f}x vs NCCL, {ac.profile_count} profiles)")
+row = lag.compare(base, wl)
+print(f"Lagom        : Z = {row['z_ms']:8.2f} ms   "
+      f"({row['speedup']:.3f}x vs NCCL, "
+      f"{lag.compare(ac, wl)['speedup']:.3f}x vs AutoCCL, "
+      f"{lag.profile_count} profiles)")
 
-lag_cfgs, lag_iters, _ = tuner.tune_workload(sim, wl)
-lag = sim.profile(wl, lag_cfgs)
-print(f"Lagom        : Z = {lag.Z*1e3:8.2f} ms   ({base.Z/lag.Z:.3f}x vs NCCL, "
-      f"{ac.Z/lag.Z:.3f}x vs AutoCCL, {lag_iters} profiles)")
+# 3. persist -> reload -> apply: the plan IS the deployable artifact
+path = os.path.join(tempfile.gettempdir(), "llama3_8b_fsdp_plan.json")
+lag.save(path)
+reloaded = TunedPlan.load(path)
+assert reloaded.configs == lag.configs             # byte-identical configs
+rt = reloaded.runtime_plan(wl)                     # fingerprint-checked
+print(f"\nplan saved + reloaded: {path}")
+print("runtime plan:",
+      {k: (v.strategy, v.num_chunks) for k, v in sorted(rt.items())})
+print("re-apply at launch:  python -m repro.launch.train --arch llama3-8b "
+      f"--smoke --tuned-plan {path}")
 
-s = lag_cfgs[(0, 0)]
+s = lag.configs[(0, 0)]
 print(f"\nexample tuned config (fwd layer-0 AllGather): "
       f"NC={s.nc} NT={s.nt} C={s.chunk_kb}KB {s.algorithm}/{s.protocol} "
       f"(NCCL default: NC={hw.default_nc} C={hw.default_chunk_kb}KB)")

@@ -1,10 +1,13 @@
 """Tune → apply → runtime: shows a Lagom-tuned configuration changing the
 actual JAX collectives (DESIGN.md §2 "recompile-with-knobs").
 
-1. Tunes the qwen2-moe EP workload on the TPU v5e profile.
-2. Maps tuned chunk sizes onto ``CollectiveRuntime`` knobs.
-3. Runs the chunked all-to-all on a host mesh and shows the chunk count in
-   the jaxpr (on a real pod the same code emits n× smaller all-to-alls).
+1. Tunes the qwen2-moe EP workload on the TPU v5e profile via the session
+   front door (``tune(...) -> TunedPlan``).
+2. Installs the plan process-wide (``core.apply.activate`` — what the
+   launchers' ``--tuned-plan`` flag does at startup).
+3. Runs the chunked all-to-all on a host mesh with NO explicit chunk
+   count: the call site picks the tuned ``a2a`` knobs up from the active
+   plan (on a real pod the same code emits n× smaller all-to-alls).
 
     PYTHONPATH=src python examples/tune_then_lower.py
 """
@@ -16,16 +19,15 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core import ParallelPlan, Simulator, TPU_V5E, extract_workload, tuner
-from repro.core.apply import runtime_plan
+from repro.core import ParallelPlan, TPU_V5E, extract_workload, tune
 from repro.parallel.collectives import chunked_all_to_all
 
 cfg = get_config("qwen2-moe-a2.7b")
 plan = ParallelPlan(kind="ep", ep=16)
 wl = extract_workload(cfg, plan, seq=4096, global_batch=256)
-sim = Simulator(TPU_V5E, noise=0.01, seed=0)
-cfgs, iters, _ = tuner.tune_workload(sim, wl)
-rt = runtime_plan(wl, cfgs)
+tuned = tune(wl, TPU_V5E, method="lagom", noise=0.01, seed=0)
+from repro.core.apply import activate
+rt = activate(tuned)          # install: collective call sites now see it
 print("tuned runtime plan:", {k: (v.strategy, v.num_chunks) for k, v in rt.items()})
 
 a2a = rt.get("a2a")
@@ -33,10 +35,10 @@ from repro.launch.mesh import make_mesh
 mesh = make_mesh((8,), ("model",))
 x = jax.random.normal(jax.random.PRNGKey(0), (8, 16, 64))
 
+# no num_chunks here — the active plan's a2a knobs apply
 y = chunked_all_to_all(x, mesh, axis="model", split_axis=1, concat_axis=0,
                        x_spec=P("model", None, None),
-                       out_spec=P("model", None, None),
-                       num_chunks=a2a.num_chunks)
+                       out_spec=P("model", None, None))
 ref = chunked_all_to_all(x, mesh, axis="model", split_axis=1, concat_axis=0,
                          x_spec=P("model", None, None),
                          out_spec=P("model", None, None), num_chunks=1)

@@ -14,10 +14,15 @@
   baselines   — NCCL/XLA default configs
   extract     — model × plan × shape -> Workload
   apply       — tuned configs -> JAX runtime knobs (chunked collectives)
+  session     — the front door: tune(...) -> TunedPlan (portable artifact)
+                + the SearchBackend registry
 """
 from repro.core.comm_params import CommConfig, min_config, vendor_default
 from repro.core.extract import ParallelPlan, extract_workload
 from repro.core.hardware import A40_NVLINK, A40_PCIE, PROFILES, TPU_V5E, Hardware
+from repro.core.session import (PlanMismatchError, SearchBackend,
+                                SearchOutcome, TunedPlan, available_methods,
+                                register_backend, tune, workload_fingerprint)
 from repro.core.simulator import Measurement, Simulator
 from repro.core.workload import CommOp, CompOp, OverlapGroup, Workload
 
@@ -27,4 +32,7 @@ __all__ = [
     "Hardware", "A40_PCIE", "A40_NVLINK", "TPU_V5E", "PROFILES",
     "Simulator", "Measurement",
     "CompOp", "CommOp", "OverlapGroup", "Workload",
+    "tune", "TunedPlan", "PlanMismatchError", "SearchBackend",
+    "SearchOutcome", "register_backend", "available_methods",
+    "workload_fingerprint",
 ]

@@ -13,10 +13,11 @@ in ``parallel.collectives`` and their chunk counts, then re-lowering.
 from __future__ import annotations
 
 import math
-from typing import Dict
+import os
+from typing import Dict, List
 
 from repro.core.comm_params import CommConfig
-from repro.core.workload import ConfigSet, Workload
+from repro.core.workload import ConfigSet, Workload, comm_site_meta
 from repro.parallel.collectives import CollectiveRuntime
 
 MAX_CHUNKS = 16      # scheduler-friendly cap: beyond this, per-chunk launch
@@ -35,11 +36,36 @@ def to_runtime(cfg: CommConfig, payload_bytes: float) -> CollectiveRuntime:
     return CollectiveRuntime(strategy=strategy, num_chunks=chunks)
 
 
+def site_runtime_plan(sites: List[Dict],
+                      configs: ConfigSet) -> Dict[str, CollectiveRuntime]:
+    """Per-site runtime plan keyed by the CommOp name prefix (site class);
+    ``sites`` is ``workload.comm_site_meta`` metadata (live or deserialized
+    from a ``TunedPlan``).  Sites without a tuned config are skipped."""
+    plan: Dict[str, CollectiveRuntime] = {}
+    for s in sites:
+        cfg = configs.get((s["group"], s["comm"]))
+        if cfg is None:
+            continue
+        key = s["name"].split(".")[0]      # ag / rs / ar / a2a site class
+        plan.setdefault(key, to_runtime(cfg, s["bytes"]))
+    return plan
+
+
 def runtime_plan(wl: Workload, configs: ConfigSet) -> Dict[str, CollectiveRuntime]:
     """Per-site runtime plan keyed by the CommOp name prefix (site class)."""
-    plan: Dict[str, CollectiveRuntime] = {}
-    for (gi, ci), cfg in configs.items():
-        op = wl.groups[gi].comms[ci]
-        key = op.name.split(".")[0]        # ag / rs / ar / a2a site class
-        plan.setdefault(key, to_runtime(cfg, op.bytes))
-    return plan
+    return site_runtime_plan(comm_site_meta(wl), configs)
+
+
+def activate(plan) -> Dict[str, CollectiveRuntime]:
+    """Lower a ``session.TunedPlan`` (object or path to its JSON) to runtime
+    knobs and install them as the process-wide active plan
+    (``parallel.collectives.runtime_for``).  Returns the runtime plan —
+    what the launchers' ``--tuned-plan`` flag applies at startup."""
+    from repro.core.session import TunedPlan
+    from repro.parallel import collectives
+
+    if isinstance(plan, (str, os.PathLike)):
+        plan = TunedPlan.load(plan)
+    rt = plan.runtime_plan()
+    collectives.set_runtime_plan(rt)
+    return rt

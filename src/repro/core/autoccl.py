@@ -21,11 +21,11 @@ unfinished group's next sample into one engine call per step.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import List, Tuple
 
 from repro.core.comm_params import CommConfig
-from repro.core.scheduler import (StepSearch, run_interleaved, run_serial,
-                                  run_shared)
+from repro.core.scheduler import StepSearch, run_workload
 from repro.core.simulator import Simulator
 from repro.core.workload import ConfigSet, OverlapGroup, Workload
 
@@ -97,26 +97,19 @@ def tune_group(sim: Simulator, group: OverlapGroup, *,
     return s.cfgs, s.requests
 
 
-def tune_workload(sim: Simulator, wl: Workload, *,
-                  interleave: bool = True) -> Tuple[ConfigSet, int]:
-    """Tune every overlap group; ``interleave=True`` (default) folds each
+def search_workload(sim: Simulator, wl: Workload, *,
+                    mode: str = "interleaved") -> Tuple[ConfigSet, int]:
+    """Tune every overlap group; ``mode="interleaved"`` (default) folds each
     unfinished group's next in-situ sample into one cross-group engine call
     per step, and whenever sharing is sound (deterministic or CRN noise —
     ``Simulator.can_share_trajectories``) structurally identical groups
-    share one descent (scheduler.run_shared).  Deterministic and CRN
-    results are identical to the serial walk."""
+    share one descent (scheduler.run_shared).  ``mode="serial"`` is the
+    reference walk, ``mode="shared"`` requires sharing soundness up front;
+    deterministic and CRN results are identical across all three."""
     from repro.core.profiling import group_fingerprint
 
-    if interleave and sim.can_share_trajectories:
-        per_group = run_shared(sim, wl.groups, AutoCCLSearch,
-                               group_fingerprint)
-    else:
-        searches = [(g, AutoCCLSearch(g)) for g in wl.groups]
-        if interleave:
-            run_interleaved(sim, searches)
-        else:
-            run_serial(sim, searches)
-        per_group = [s for _, s in searches]
+    per_group = run_workload(sim, wl.groups, AutoCCLSearch,
+                             group_fingerprint, mode)
     configs: ConfigSet = {}
     iters = 0
     for gi, s in enumerate(per_group):
@@ -124,3 +117,18 @@ def tune_workload(sim: Simulator, wl: Workload, *,
             configs[(gi, ci)] = cfg
         iters += s.requests
     return configs, iters
+
+
+def tune_workload(sim: Simulator, wl: Workload, *,
+                  interleave: bool = True) -> Tuple[ConfigSet, int]:
+    """Deprecated pre-session entry point (one release of grace): the
+    legacy 2-tuple signature, bit-identical to ``search_workload`` with
+    ``mode="interleaved" if interleave else "serial"``.  Use
+    ``repro.core.session.tune(..., method="autoccl")`` instead."""
+    warnings.warn(
+        "autoccl.tune_workload is deprecated; use repro.core.session.tune("
+        "wl, hw, method='autoccl', mode=...) — or autoccl.search_workload "
+        "for an existing Simulator — and will be removed next release",
+        DeprecationWarning, stacklevel=2)
+    return search_workload(sim, wl,
+                           mode="interleaved" if interleave else "serial")

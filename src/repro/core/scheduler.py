@@ -82,6 +82,32 @@ from typing import List, Sequence, Tuple
 
 from repro.core.workload import OverlapGroup
 
+#: Scheduling modes for a whole-workload search (the session API's ``mode``):
+#:   ``"serial"``      — finish each group before starting the next (the
+#:                       reference walk; the exact pre-scheduler request
+#:                       stream).
+#:   ``"interleaved"`` — one cross-group engine call per lock-step round,
+#:                       with trajectory sharing engaged automatically
+#:                       whenever it is sound (``can_share_trajectories``).
+#:   ``"shared"``      — interleaved with trajectory sharing *required*:
+#:                       rejected up front when sharing is unsound
+#:                       (default-mode noise) instead of silently degrading.
+MODES = ("serial", "interleaved", "shared")
+
+
+def resolve_mode(sim, mode: str) -> str:
+    """Validate ``mode`` against ``MODES`` and the simulator's sharing
+    soundness; returns the mode unchanged so call sites can inline it."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mode == "shared" and not sim.can_share_trajectories:
+        raise ValueError(
+            "mode='shared' requires trajectory sharing to be sound — a "
+            "deterministic simulator or noise_mode='crn' (this one has "
+            f"noise={sim.noise}, noise_mode={sim.noise_mode!r}); use "
+            "mode='interleaved' to share opportunistically instead")
+    return mode
+
 
 class StepSearch:
     """Resumable search over one overlap group (see module docstring)."""
@@ -167,3 +193,21 @@ def run_shared(sim, groups: Sequence[OverlapGroup], make_search,
         else:
             counted.add(id(s))
     return order
+
+
+def run_workload(sim, groups: Sequence[OverlapGroup], make_search,
+                 class_key, mode: str) -> List[StepSearch]:
+    """Mode dispatch shared by every whole-workload tuner
+    (``tuner.search_workload`` / ``autoccl.search_workload``): validate
+    ``mode``, pick the schedule — sharing whenever sound and not serial —
+    and drive every group's search to completion.  Returns one finished
+    search per group, aligned with ``groups``."""
+    mode = resolve_mode(sim, mode)
+    if mode != "serial" and sim.can_share_trajectories:
+        return run_shared(sim, groups, make_search, class_key)
+    searches = [(g, make_search(g)) for g in groups]
+    if mode != "serial":
+        run_interleaved(sim, searches)
+    else:
+        run_serial(sim, searches)
+    return [s for _, s in searches]

@@ -1,0 +1,412 @@
+"""One front door for the tuning product surface: ``tune`` -> ``TunedPlan``.
+
+The engine stack underneath (batched profiling, cross-group scheduling,
+counter-based noise) grew fast, but every caller still hand-wired a
+``Simulator``, picked among ``tuner.tune_workload`` (3-tuple),
+``autoccl.tune_workload`` (2-tuple) and ``baselines.nccl_defaults``, then
+separately threaded configs through ``core.apply`` — the tune -> profile ->
+compare -> apply loop was duplicated across every example, benchmark and
+launcher.  This module is the paper's actual pitch ("co-tune once, deploy
+the plan") as an API:
+
+``tune(workload, hardware, *, method, mode, noise, noise_mode, seed)``
+    One call, any registered search method, returning a ``TunedPlan``.
+
+``TunedPlan``
+    A first-class, persistable artifact: tuned configs plus provenance
+    (method, hardware, workload structural fingerprint, seed, noise mode),
+    per-step traces, ``profile_count`` and engine cache telemetry.  It
+    round-trips through JSON (``save``/``load``/``to_json``/``from_json``),
+    refuses to act on a structurally different workload
+    (``PlanMismatchError``), lowers itself to JAX runtime knobs
+    (``runtime_plan``, self-contained — the embedded site metadata means a
+    deserialized plan needs no workload object), and produces the speedup
+    rows the benchmarks print (``compare``).
+
+``SearchBackend`` registry
+    The built-in methods (``"lagom"``, ``"autoccl"``, ``"nccl"``) are
+    plain registry entries; third-party tuners join with::
+
+        @register_backend("mytuner")
+        class MyBackend:
+            def search(self, sim, wl, *, mode, **options):
+                return SearchOutcome(configs, profile_count, traces)
+
+    and are immediately addressable as ``tune(..., method="mytuner")``.
+
+Scheduling ``mode`` (``scheduler.MODES``): ``"serial"`` is the reference
+per-group walk, ``"interleaved"`` (default) the cross-group lock-step
+pipeline with trajectory sharing whenever sound, ``"shared"`` requires
+sharing soundness up front.  Deterministic and CRN-noise searches return
+byte-identical configs under all three.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+from dataclasses import dataclass, field, fields
+from typing import Callable, Dict, List, Optional, Protocol, Union, runtime_checkable
+
+from repro.core.comm_params import CommConfig
+from repro.core.hardware import PROFILES, Hardware
+from repro.core.scheduler import MODES, resolve_mode
+from repro.core.simulator import Measurement, Simulator
+from repro.core.workload import ConfigSet, Workload, comm_site_meta
+
+PLAN_VERSION = 1
+
+
+def workload_fingerprint(wl: Workload) -> str:
+    """Structural identity of a whole workload: the per-group fingerprints
+    the profiling cache keys on (op shapes/bytes, names excluded), hashed
+    so plans can carry it as a short provenance string.  Two workloads
+    with equal fingerprints are indistinguishable to the contention model,
+    which is exactly the condition under which re-applying a plan is
+    sound."""
+    from repro.core.profiling import group_fingerprint
+
+    payload = repr(tuple(group_fingerprint(g) for g in wl.groups))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+class PlanMismatchError(ValueError):
+    """Raised when a ``TunedPlan`` is applied to a workload whose
+    structural fingerprint differs from the one it was tuned on."""
+
+
+# ---------------------------------------------------------------------------
+# search-backend registry
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SearchOutcome:
+    """What a backend hands back: tuned configs for every comm site, the
+    number of logical ProfileTime invocations spent, and optional per-step
+    trace rows (dicts; ``cfg`` entries may be ``CommConfig``)."""
+    configs: ConfigSet
+    profile_count: int = 0
+    traces: List[Dict] = field(default_factory=list)
+
+
+@runtime_checkable
+class SearchBackend(Protocol):
+    """A tuning method: anything with
+    ``search(sim, wl, *, mode, **options) -> SearchOutcome``."""
+
+    def search(self, sim: Simulator, wl: Workload, *, mode: str,
+               **options) -> SearchOutcome: ...
+
+
+_BACKENDS: Dict[str, SearchBackend] = {}
+
+
+def register_backend(name: str, *, overwrite: bool = False) -> Callable:
+    """Class/instance decorator registering a ``SearchBackend`` under
+    ``name`` (classes are instantiated with no arguments).  The method is
+    immediately addressable as ``tune(..., method=name)``."""
+    def deco(obj):
+        if name in _BACKENDS and not overwrite:
+            raise ValueError(f"search backend {name!r} already registered "
+                             "(pass overwrite=True to replace it)")
+        backend = obj() if isinstance(obj, type) else obj
+        if not callable(getattr(backend, "search", None)):
+            raise TypeError(f"backend {name!r} must expose a "
+                            "search(sim, wl, *, mode, **options) method")
+        _BACKENDS[name] = backend
+        return obj
+    return deco
+
+
+def unregister_backend(name: str) -> None:
+    _BACKENDS.pop(name, None)
+
+
+def available_methods() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def get_backend(name: str) -> SearchBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown tuning method {name!r}; registered: "
+                       f"{available_methods()}") from None
+
+
+@register_backend("lagom")
+class LagomBackend:
+    """Algorithms 1–2 (``core.tuner``); options: ``base``, ``warm_start``."""
+
+    def search(self, sim, wl, *, mode, base=None, warm_start=False):
+        from repro.core import tuner
+        configs, iters, traces = tuner.search_workload(
+            sim, wl, mode=mode, base=base, warm_start=warm_start)
+        return SearchOutcome(configs, iters, traces)
+
+
+@register_backend("autoccl")
+class AutoCCLBackend:
+    """AutoCCL [NSDI'25] coordinate descent (``core.autoccl``).  Takes no
+    options — an unexpected one raises, same as the lagom backend."""
+
+    def search(self, sim, wl, *, mode):
+        from repro.core import autoccl
+        configs, iters = autoccl.search_workload(sim, wl, mode=mode)
+        return SearchOutcome(configs, iters, [])
+
+
+@register_backend("nccl")
+class NCCLBackend:
+    """Vendor defaults (``core.baselines``) — zero profiles, the un-tuned
+    baseline as a plan so it composes with ``compare``/``runtime_plan``."""
+
+    def search(self, sim, wl, *, mode):
+        from repro.core import baselines
+        return SearchOutcome(baselines.nccl_defaults(wl, sim.hw), 0, [])
+
+
+# ---------------------------------------------------------------------------
+# the portable artifact
+# ---------------------------------------------------------------------------
+
+# derived, not hand-listed: a field added to CommConfig can never be
+# silently dropped from saved plans
+_CFG_FIELDS = tuple(f.name for f in fields(CommConfig))
+
+
+def _cfg_to_dict(cfg: CommConfig) -> Dict:
+    return {f: getattr(cfg, f) for f in _CFG_FIELDS}
+
+
+def _cfg_from_dict(d: Dict) -> CommConfig:
+    return CommConfig(**{f: d[f] for f in _CFG_FIELDS})
+
+
+def _trace_val_to_json(v):
+    """Trace values hold two non-JSON types: ``CommConfig`` rows and the
+    non-finite floats of Algorithm 1's H metric (``inf`` marks a finished
+    comm).  Both get *tagged* dict encodings — applied recursively and
+    under any trace key, so third-party backend traces (nested lists/dicts
+    included; tuples come back as lists, as in any JSON) round-trip too —
+    and the emitted document is strict RFC JSON
+    (``json.dumps(allow_nan=True)`` would write the bare ``Infinity``
+    token, which jq/JS/most non-Python readers reject)."""
+    if isinstance(v, CommConfig):
+        return {"__commconfig__": _cfg_to_dict(v)}
+    if isinstance(v, float) and not math.isfinite(v):
+        return {"__nonfinite__": repr(v)}
+    if isinstance(v, (list, tuple)):
+        return [_trace_val_to_json(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _trace_val_to_json(x) for k, x in v.items()}
+    return v
+
+
+def _trace_val_from_json(v):
+    if isinstance(v, dict):
+        if "__nonfinite__" in v:
+            return float(v["__nonfinite__"])
+        if "__commconfig__" in v:
+            return _cfg_from_dict(v["__commconfig__"])
+        return {k: _trace_val_from_json(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [_trace_val_from_json(x) for x in v]
+    return v
+
+
+@dataclass
+class TunedPlan:
+    """A tuned-configuration artifact with provenance — persist it, diff
+    it, ship it to the runtime.  Produced by ``tune``; self-contained: the
+    embedded ``sites`` metadata (one row per comm site: name, kind, payload
+    bytes) lets a deserialized plan lower itself to runtime knobs without
+    the workload object, while ``fingerprint`` guards every
+    workload-taking operation against structural mismatch."""
+    method: str                    # registry name that produced the configs
+    mode: str                      # scheduling mode it searched under
+    hardware: str                  # Hardware.name it was tuned for
+    workload: str                  # Workload.name (informational)
+    fingerprint: str               # workload_fingerprint at tune time
+    seed: int
+    noise: float
+    noise_mode: str
+    configs: ConfigSet = field(default_factory=dict)
+    sites: List[Dict] = field(default_factory=list)
+    profile_count: int = 0
+    traces: List[Dict] = field(default_factory=list)
+    cache_stats: Optional[Dict] = None
+    version: int = PLAN_VERSION
+
+    # -- structural guard --------------------------------------------------
+    def matches(self, wl: Workload) -> bool:
+        return self.fingerprint == workload_fingerprint(wl)
+
+    def check(self, wl: Workload) -> None:
+        fp = workload_fingerprint(wl)
+        if fp != self.fingerprint:
+            raise PlanMismatchError(
+                f"plan was tuned on {self.workload!r} "
+                f"(fingerprint {self.fingerprint[:12]}…) but workload "
+                f"{wl.name!r} fingerprints to {fp[:12]}… — structures "
+                "differ, re-applying the configs is unsound; re-tune")
+
+    # -- apply / evaluate / compare ---------------------------------------
+    def runtime_plan(self, wl: Optional[Workload] = None) -> Dict:
+        """Lower to per-site-class JAX runtime knobs (``core.apply``).
+        Self-contained via the embedded site metadata; pass the workload
+        to assert it structurally matches before applying."""
+        from repro.core import apply as apply_mod  # lazy: apply pulls in jax
+
+        if wl is not None:
+            self.check(wl)
+        return apply_mod.site_runtime_plan(self.sites, self.configs)
+
+    def _hw(self) -> Hardware:
+        try:
+            return PROFILES[self.hardware]
+        except KeyError:
+            raise KeyError(
+                f"plan hardware {self.hardware!r} is not a registered "
+                f"profile ({sorted(PROFILES)}); pass an explicit sim= to "
+                "evaluate/compare") from None
+
+    def evaluate(self, wl: Workload, *, sim: Optional[Simulator] = None,
+                 ) -> Measurement:
+        """Profile the plan's configs on its workload (fingerprint-checked).
+        Defaults to a fresh deterministic simulator on the plan's hardware
+        profile so evaluations are stable; pass ``sim=`` to evaluate under
+        jitter or on shared RNG state."""
+        self.check(wl)
+        sim = sim or Simulator(self._hw())
+        return sim.profile(wl, self.configs)
+
+    def compare(self, other: "TunedPlan", wl: Workload, *,
+                sim: Optional[Simulator] = None) -> Dict:
+        """The speedup row the benchmarks print; ``speedup`` = how much
+        faster this plan's makespan is than ``other``'s.  Deterministic by
+        default (a fresh noise-free simulator on the plan's hardware).
+        For a *paired* noisy comparison, evaluate each plan on its own
+        fresh ``noise_mode="crn"`` simulator with one seed — CRN draws are
+        a pure function of (structure, trajectory position), so both
+        evaluations then see identical jitter; a shared default-noise
+        simulator gives independent draws, not pairing."""
+        sim = sim or Simulator(self._hw())
+        mine = self.evaluate(wl, sim=sim)
+        theirs = other.evaluate(wl, sim=sim)
+        return dict(workload=wl.name, method=self.method,
+                    baseline=other.method,
+                    z_ms=mine.Z * 1e3, baseline_z_ms=theirs.Z * 1e3,
+                    speedup=theirs.Z / mine.Z,
+                    profiles=self.profile_count,
+                    baseline_profiles=other.profile_count)
+
+    # -- serialization -----------------------------------------------------
+    def to_json(self, *, indent: Optional[int] = 2) -> str:
+        d = {f.name: getattr(self, f.name) for f in fields(self)}
+        d["configs"] = [dict(group=gi, comm=ci, **_cfg_to_dict(cfg))
+                        for (gi, ci), cfg in sorted(self.configs.items())]
+        d["traces"] = [_trace_val_to_json(t) for t in self.traces]
+        return json.dumps(d, indent=indent, allow_nan=False)
+
+    @classmethod
+    def from_json(cls, text: str) -> "TunedPlan":
+        d = json.loads(text)
+        version = d.pop("version", None)
+        if version != PLAN_VERSION:
+            raise ValueError(f"unsupported TunedPlan version {version!r} "
+                             f"(this build reads version {PLAN_VERSION})")
+        d["configs"] = {(c["group"], c["comm"]): _cfg_from_dict(c)
+                        for c in d["configs"]}
+        d["traces"] = [_trace_val_from_json(t) for t in d["traces"]]
+        return cls(version=PLAN_VERSION, **d)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "TunedPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def load_plan(path: str) -> TunedPlan:
+    """Module-level alias for ``TunedPlan.load`` (launcher convenience)."""
+    return TunedPlan.load(path)
+
+
+def _lookup_hw(hardware: Union[Hardware, str]) -> Hardware:
+    if isinstance(hardware, str):
+        try:
+            return PROFILES[hardware]
+        except KeyError:
+            raise KeyError(f"unknown hardware profile {hardware!r}; "
+                           f"registered: {sorted(PROFILES)}") from None
+    return hardware
+
+
+# ---------------------------------------------------------------------------
+# the front door
+# ---------------------------------------------------------------------------
+
+def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
+         method: str = "lagom", mode: str = "interleaved",
+         noise: float = 0.0, noise_mode: str = "default", seed: int = 0,
+         batched: bool = True, simulator: Optional[Simulator] = None,
+         **options) -> TunedPlan:
+    """Tune ``workload``'s collectives for ``hardware`` and return the
+    result as a portable ``TunedPlan``.
+
+    ``hardware`` is a ``Hardware`` profile or its registry name
+    (``core.hardware.PROFILES``).  ``method`` selects a registered search
+    backend (``available_methods()``); ``mode`` a schedule from
+    ``scheduler.MODES``.  ``noise``/``noise_mode``/``seed``/``batched``
+    configure the ProfileTime simulator exactly as ``Simulator(...)`` —
+    configs are byte-identical to driving the per-method search by hand
+    with the same simulator arguments.  Pass ``simulator=`` to reuse RNG
+    state / engine caches instead (``hardware`` may then be omitted, and
+    the simulator kwargs must stay unset — they would be silently shadowed
+    otherwise, so that is rejected).  Remaining keyword ``options`` go to
+    the backend (e.g. Lagom's ``warm_start``)."""
+    backend = get_backend(method)
+    if simulator is not None:
+        sim = simulator
+        if hardware is not None:
+            hw = _lookup_hw(hardware)
+            if hw is not sim.hw:
+                raise ValueError(
+                    f"simulator hardware {sim.hw.name!r} conflicts with "
+                    f"hardware={hw.name!r}; pass one or the other")
+        if (noise, noise_mode, seed, batched) != (0.0, "default", 0, True):
+            raise ValueError(
+                "simulator= carries its own noise/noise_mode/seed/batched; "
+                "configure the Simulator instead of passing them to tune()")
+    else:
+        if hardware is None:
+            raise ValueError("pass hardware= (profile or name) or simulator=")
+        hw = _lookup_hw(hardware)
+        sim = Simulator(hw, noise=noise, seed=seed, noise_mode=noise_mode,
+                        batched=batched)
+    # validate here, not just in the built-in backends, so mode errors and
+    # the shared-soundness rejection are uniform across every method
+    # (nccl, third-party backends included)
+    mode = resolve_mode(sim, mode)
+    outcome = backend.search(sim, workload, mode=mode, **options)
+    stats = (sim.engine.cache_stats()
+             if sim.batched and sim._engine is not None else None)
+    return TunedPlan(
+        method=method, mode=mode, hardware=sim.hw.name,
+        workload=workload.name, fingerprint=workload_fingerprint(workload),
+        seed=sim.seed, noise=sim.noise, noise_mode=sim.noise_mode,
+        configs=dict(outcome.configs), sites=comm_site_meta(workload),
+        profile_count=outcome.profile_count, traces=list(outcome.traces),
+        cache_stats=stats)
+
+
+__all__ = [
+    "MODES", "PLAN_VERSION", "PlanMismatchError", "SearchBackend",
+    "SearchOutcome", "TunedPlan", "available_methods", "get_backend",
+    "load_plan", "register_backend", "tune", "unregister_backend",
+    "workload_fingerprint",
+]

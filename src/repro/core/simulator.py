@@ -21,6 +21,7 @@ jitter); see the ``core.noise`` module docstring for the full contract.
 from __future__ import annotations
 
 import math
+import numbers
 from dataclasses import dataclass
 from typing import List, Tuple
 
@@ -66,9 +67,20 @@ class Simulator:
     def __init__(self, hw: Hardware, *, noise: float = 0.0, seed: int = 0,
                  noise_mode: str = "default", batched: bool = True,
                  cache_size: int = 131072):
+        # eager argument validation: a bad seed or noise level otherwise
+        # only surfaces as an opaque Philox/Box-Muller failure (or silent
+        # NaN measurements) deep inside the first noisy profile call
         if noise_mode not in NOISE_MODES:
             raise ValueError(
                 f"noise_mode must be one of {NOISE_MODES}, got {noise_mode!r}")
+        if isinstance(seed, bool) or not isinstance(seed, numbers.Integral):
+            raise ValueError(
+                f"seed must be an int, got {type(seed).__name__} ({seed!r})")
+        if isinstance(noise, bool) or not isinstance(noise, numbers.Real) \
+                or math.isnan(noise) or math.isinf(noise) or noise < 0:
+            raise ValueError(
+                "noise must be a finite non-negative lognormal sigma, got "
+                f"{noise!r}")
         self.hw = hw
         self.noise = noise
         self.seed = seed

@@ -15,24 +15,26 @@ candidate batch — subspace probes, per-dial growth candidates, bisection
 midpoints — and consumes the measurements fed back.  ``tune_group`` drives
 one machine to completion through ``Simulator.profile_many`` (the serial
 walk, bit-identical to the ``batched=False`` reference event loop
-including the counter-based noise stream, core.noise); ``tune_workload``
+including the counter-based noise stream, core.noise); ``search_workload``
 round-robins every group's pending batch into one cross-group
-``profile_many_grouped`` call per step (``interleave=True``, the
+``profile_many_grouped`` call per step (``mode="interleaved"``, the
 engine-aware default), which in deterministic and CRN-noise modes
 produces configs, traces, and ``profile_count`` identical to the serial
-walk.  ``profile_count`` still counts logical invocations.
+walk.  ``profile_count`` still counts logical invocations.  The legacy
+``tune_workload`` signature survives as a deprecation shim; the session
+front door (``core.session``) is the supported public surface.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import priority
 from repro.core.comm_params import (C_MAX_KB, C_MIN_KB, NC_MAX, NC_MIN,
                                     NT_MAX, CommConfig, min_config)
-from repro.core.scheduler import (StepSearch, run_interleaved, run_serial,
-                                  run_shared)
+from repro.core.scheduler import StepSearch, run_workload
 from repro.core.simulator import Simulator
 from repro.core.workload import ConfigSet, OverlapGroup, Workload
 
@@ -298,33 +300,32 @@ def tune_group(sim: Simulator, group: OverlapGroup, *,
     return gs.result()
 
 
-def tune_workload(sim: Simulator, wl: Workload, *,
-                  base: Optional[CommConfig] = None,
-                  warm_start: bool = False,
-                  interleave: bool = True) -> Tuple[ConfigSet, int, List[Dict]]:
+def search_workload(sim: Simulator, wl: Workload, *,
+                    mode: str = "interleaved",
+                    base: Optional[CommConfig] = None,
+                    warm_start: bool = False,
+                    ) -> Tuple[ConfigSet, int, List[Dict]]:
     """Tune every overlap group; groups are independent (their comms only
     contend within their own window), so their searches interleave into one
     cross-group engine call per step by default — and whenever trajectory
     sharing is sound (deterministic mode, or CRN noise: see
     ``Simulator.can_share_trajectories``) structurally identical groups
     share one trajectory outright (scheduler.run_shared).
-    ``interleave=False`` restores the serial group walk; in deterministic
-    and CRN modes both schedules return identical configs, traces, and
-    ``profile_count``."""
+
+    ``mode`` selects the schedule (``scheduler.MODES``): ``"serial"`` is
+    the reference group walk, ``"interleaved"`` (default) the cross-group
+    lock-step pipeline with opportunistic sharing, and ``"shared"``
+    requires sharing soundness up front.  In deterministic and CRN modes
+    all three return identical configs, traces, and ``profile_count``.
+
+    This is the engine entry the session front door (``core.session``)
+    drives; prefer ``session.tune`` unless you already hold a Simulator."""
     from repro.core.profiling import group_fingerprint
 
     def make(g):
         return GroupSearch(g, sim.hw, base=base, warm_start=warm_start)
 
-    if interleave and sim.can_share_trajectories:
-        per_group = run_shared(sim, wl.groups, make, group_fingerprint)
-    else:
-        searches = [(g, make(g)) for g in wl.groups]
-        if interleave:
-            run_interleaved(sim, searches)
-        else:
-            run_serial(sim, searches)
-        per_group = [s for _, s in searches]
+    per_group = run_workload(sim, wl.groups, make, group_fingerprint, mode)
     configs: ConfigSet = {}
     iters = 0
     traces: List[Dict] = []
@@ -335,3 +336,21 @@ def tune_workload(sim: Simulator, wl: Workload, *,
         iters += res.iterations
         traces.extend(dict(group=gi, **t) for t in res.trace)
     return configs, iters, traces
+
+
+def tune_workload(sim: Simulator, wl: Workload, *,
+                  base: Optional[CommConfig] = None,
+                  warm_start: bool = False,
+                  interleave: bool = True) -> Tuple[ConfigSet, int, List[Dict]]:
+    """Deprecated pre-session entry point (one release of grace): the
+    legacy 3-tuple signature, bit-identical to ``search_workload`` with
+    ``mode="interleaved" if interleave else "serial"``.  Use
+    ``repro.core.session.tune(..., method="lagom")`` instead."""
+    warnings.warn(
+        "tuner.tune_workload is deprecated; use repro.core.session.tune("
+        "wl, hw, method='lagom', mode=...) — or tuner.search_workload for "
+        "an existing Simulator — and will be removed next release",
+        DeprecationWarning, stacklevel=2)
+    return search_workload(sim, wl,
+                           mode="interleaved" if interleave else "serial",
+                           base=base, warm_start=warm_start)

@@ -80,6 +80,17 @@ class Workload:
 ConfigSet = Dict[Tuple[int, int], CommConfig]
 
 
+def comm_site_meta(wl: Workload) -> List[Dict]:
+    """Portable per-site metadata — everything ``core.apply`` reads from
+    the workload when lowering configs to runtime knobs, in a JSON-safe
+    shape.  ``session.TunedPlan`` embeds this so a saved plan can be
+    re-applied without rebuilding the workload it was tuned on."""
+    return [dict(group=gi, comm=ci, name=op.name, kind=op.kind,
+                 bytes=op.bytes, group_size=op.group_size)
+            for gi, g in enumerate(wl.groups)
+            for ci, op in enumerate(g.comms)]
+
+
 def uniform_configs(wl: Workload, cfg: CommConfig) -> ConfigSet:
     return {site: cfg for site in wl.comm_sites()}
 

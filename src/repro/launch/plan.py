@@ -1,0 +1,53 @@
+"""Launcher-side ``TunedPlan`` application (the ``--tuned-plan`` flag).
+
+"Co-tune once, deploy the plan": a plan saved by ``session.tune(...)``
+(``plan.save("plan.json")``) is loaded at launch, lowered to per-site-class
+collective runtime knobs via ``core.apply``, and installed process-wide
+(``parallel.collectives.runtime_for``).
+
+Reach, stated plainly: the knobs apply to the explicit chunked-collective
+helpers (``ring_ag_matmul`` / ``mm_reduce_scatter`` / ``chunked_all_to_all``
+with ``num_chunks`` unset — see examples/tune_then_lower.py).  The stock
+jit/GSPMD model path does not route through those helpers yet, so its HLO
+is unchanged by a plan; wiring ``runtime_for`` into the sharded model
+builders is the ROADMAP follow-up.
+
+The launcher has no ``Workload`` object, so the plan's structural
+fingerprint cannot be verified here (that guard runs in
+``TunedPlan.runtime_plan(wl)`` whenever the workload is in hand); the
+model-name cross-check below is the launch-time proxy for it.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Dict, Optional
+
+from repro.core.apply import activate
+from repro.core.session import TunedPlan
+
+
+def apply_tuned_plan(path: str, *, expect_arch: Optional[str] = None,
+                     quiet: bool = False) -> Dict:
+    """Load, lower, and install a saved plan; returns the runtime plan
+    (identical to ``TunedPlan.load(path).runtime_plan()``).  When
+    ``expect_arch`` is given and does not match the model the plan was
+    tuned on, a ``RuntimeWarning`` is emitted (the plan still applies —
+    site-class knobs are coarse — but the tuning is unsound for a
+    different model; re-tune)."""
+    plan = TunedPlan.load(path)
+    tuned_model = plan.workload.split(":")[0]
+    if expect_arch is not None and tuned_model != expect_arch:
+        warnings.warn(
+            f"tuned plan {path} was tuned on workload {plan.workload!r} "
+            f"but this launch runs arch {expect_arch!r} — site-class knobs "
+            "may not correspond; re-tune for this model",
+            RuntimeWarning, stacklevel=2)
+    rt = activate(plan)
+    if not quiet:
+        knobs = ", ".join(f"{k}={v.strategy}/x{v.num_chunks}"
+                          for k, v in sorted(rt.items()))
+        print(f"tuned plan {path}: {plan.method}/{plan.mode} on "
+              f"{plan.hardware} (workload {plan.workload}, "
+              f"{plan.profile_count} profiles) -> {knobs} "
+              "[applies to chunked-collective call sites]")
+    return rt

@@ -11,6 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.launch.plan import apply_tuned_plan
 from repro.models import model as M
 from repro.serving.engine import Engine
 
@@ -23,9 +24,15 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--tuned-plan", default=None,
+                    help="saved session.TunedPlan JSON: lowered to collective "
+                         "runtime knobs and installed for this run "
+                         "(consumed by chunked-collective call sites)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.tuned_plan:
+        apply_tuned_plan(args.tuned_plan, expect_arch=cfg.name)
     rng = jax.random.PRNGKey(0)
     params = M.init_params(cfg, rng)
     engine = Engine(cfg, params, batch_size=args.batch, max_seq=args.max_seq)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.launch.plan import apply_tuned_plan
 from repro.models import model as M
 from repro.optim import adamw
 from repro.parallel import constraints as CT
@@ -40,6 +41,10 @@ def main(argv=None):
                     help="e.g. 2x4 -> (data=2, model=4) pjit mesh")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--tuned-plan", default=None,
+                    help="saved session.TunedPlan JSON: lowered to collective "
+                         "runtime knobs and installed for this run "
+                         "(consumed by chunked-collective call sites)")
     args = ap.parse_args(argv)
 
     if args.config:
@@ -56,6 +61,8 @@ def main(argv=None):
     else:
         assert args.arch, "--arch or --config required"
         cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.tuned_plan:
+        apply_tuned_plan(args.tuned_plan, expect_arch=cfg.name)
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                     global_batch=args.batch)
     data = iter(SyntheticCorpus(dc))

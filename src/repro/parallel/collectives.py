@@ -49,6 +49,39 @@ class CollectiveRuntime:
     num_chunks: int = 1
 
 
+# Process-wide active runtime plan: per-site-class knobs (what a saved
+# ``session.TunedPlan`` lowers to).  Launchers install it via
+# ``core.apply.activate`` (the ``--tuned-plan`` flag); the chunked
+# collectives below consume it whenever a call site leaves ``num_chunks``
+# unset (``None``), so an installed plan changes the emitted collective
+# structure without hand-plumbed chunk counts.
+_ACTIVE_PLAN: dict = {}
+
+_DEFAULT_RUNTIME = CollectiveRuntime()
+
+
+def set_runtime_plan(plan: dict) -> None:
+    """Install ``{site_class: CollectiveRuntime}`` as the active plan
+    (replacing any previous one; empty dict clears it)."""
+    global _ACTIVE_PLAN
+    _ACTIVE_PLAN = dict(plan)
+
+
+def active_runtime_plan() -> dict:
+    return dict(_ACTIVE_PLAN)
+
+
+def runtime_for(site: str) -> CollectiveRuntime:
+    """The active knobs for a collective site class (``"ag"``, ``"rs"``,
+    ``"ar"``, ``"a2a"``, ``"p2p"``); XLA defaults when no plan is active."""
+    return _ACTIVE_PLAN.get(site, _DEFAULT_RUNTIME)
+
+
+def _resolve_chunks(num_chunks, site: str) -> int:
+    """Explicit ``num_chunks`` wins; ``None`` defers to the active plan."""
+    return runtime_for(site).num_chunks if num_chunks is None else num_chunks
+
+
 # ---------------------------------------------------------------------------
 # all-gather ∘ matmul  (column-parallel matmul with sequence-sharded input)
 #   x: (..., T, D) sharded on T over `axis`;  w: (D, F) sharded on F
@@ -96,7 +129,8 @@ def _ring_ag_matmul_local(x, w, *, axis: str, num_chunks: int):
 
 def ring_ag_matmul(x, w, mesh: Mesh, *, axis: str = "model",
                    x_spec: P, w_spec: P, out_spec: P,
-                   num_chunks: int = 1):
+                   num_chunks: int | None = None):
+    num_chunks = _resolve_chunks(num_chunks, "ag")
     fn = shard_map(partial(_ring_ag_matmul_local, axis=axis, num_chunks=num_chunks),
                    mesh=mesh, in_specs=(x_spec, w_spec), out_specs=out_spec)
     return fn(x, w)
@@ -136,7 +170,9 @@ def _mm_rs_local(x, w, *, axis: str, num_chunks: int):
 
 
 def mm_reduce_scatter(x, w, mesh: Mesh, *, axis: str = "model",
-                      x_spec: P, w_spec: P, out_spec: P, num_chunks: int = 1):
+                      x_spec: P, w_spec: P, out_spec: P,
+                      num_chunks: int | None = None):
+    num_chunks = _resolve_chunks(num_chunks, "rs")
     fn = shard_map(partial(_mm_rs_local, axis=axis, num_chunks=num_chunks),
                    mesh=mesh, in_specs=(x_spec, w_spec), out_specs=out_spec)
     return fn(x, w)
@@ -149,10 +185,12 @@ def mm_reduce_scatter(x, w, mesh: Mesh, *, axis: str = "model",
 
 def chunked_all_to_all(x, mesh: Mesh, *, axis: str = "model",
                        split_axis: int, concat_axis: int,
-                       x_spec: P, out_spec: P, num_chunks: int = 1):
+                       x_spec: P, out_spec: P, num_chunks: int | None = None):
     """lax.all_to_all decomposed into ``num_chunks`` sequential a2a's over
     the trailing feature dim, so expert FFN compute on early chunks overlaps
-    the transfer of later ones (the EP dual-batch pattern)."""
+    the transfer of later ones (the EP dual-batch pattern).  ``num_chunks=
+    None`` (default) defers to the active tuned plan's ``a2a`` knobs."""
+    num_chunks = _resolve_chunks(num_chunks, "a2a")
     def local(xl):
         if num_chunks <= 1 or xl.shape[-1] % num_chunks:
             return lax.all_to_all(xl, axis, split_axis, concat_axis, tiled=True)

@@ -33,9 +33,9 @@ def test_lagom_beats_nccl_and_autoccl_fsdp():
     for hw in (A40_NVLINK, A40_PCIE):
         sim = Simulator(hw, noise=0.01, seed=0)
         base = sim.profile(wl, nccl_defaults(wl, hw))
-        cfgs, _, _ = tuner.tune_workload(sim, wl)
+        cfgs, _, _ = tuner.search_workload(sim, wl)
         lag = sim.profile(wl, cfgs)
-        ac_cfgs, _ = autoccl.tune_workload(Simulator(hw, noise=0.01, seed=1), wl)
+        ac_cfgs, _ = autoccl.search_workload(Simulator(hw, noise=0.01, seed=1), wl)
         ac = sim.profile(wl, ac_cfgs)
         assert base.Z / lag.Z > 1.01, hw.name            # beats NCCL
         assert ac.Z / lag.Z > 1.05, hw.name              # beats AutoCCL
@@ -47,7 +47,7 @@ def test_autoccl_overallocates_in_compute_bound():
     hw = A40_NVLINK
     sim = Simulator(hw, noise=0.01, seed=0)
     base = sim.profile(wl, nccl_defaults(wl, hw))
-    ac_cfgs, _ = autoccl.tune_workload(Simulator(hw, noise=0.01, seed=1), wl)
+    ac_cfgs, _ = autoccl.search_workload(Simulator(hw, noise=0.01, seed=1), wl)
     ac = sim.profile(wl, ac_cfgs)
     assert ac.Z > base.Z                     # worse end-to-end
     assert ac_cfgs[(0, 0)].nc >= 32          # over-allocated channels
@@ -57,7 +57,7 @@ def test_lagom_config_shape_matches_paper():
     """Fig. 8: Lagom lands at low NC + sub-default chunk (NC=2..8, C<2MB)."""
     wl = _fsdp_workload(layers=6)
     sim = Simulator(A40_NVLINK, noise=0.01, seed=0)
-    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    cfgs, _, _ = tuner.search_workload(sim, wl)
     s = cfgs[(0, 0)]
     assert s.nc <= A40_NVLINK.default_nc
     assert s.chunk_kb <= A40_NVLINK.default_chunk_kb
@@ -69,7 +69,7 @@ def test_tuner_linear_complexity():
     for layers in (2, 4, 8):
         wl = _fsdp_workload(layers=layers)
         sim = Simulator(A40_NVLINK, noise=0.0, seed=0)
-        _, n, _ = tuner.tune_workload(sim, wl)
+        _, n, _ = tuner.search_workload(sim, wl)
         iters[layers] = n
     r1 = iters[4] / iters[2]
     r2 = iters[8] / iters[4]
@@ -120,7 +120,7 @@ def test_tp_ep_workloads_tune(kind, model):
     wl = extract_workload(cfg, plan, seq=2048, global_batch=16, layers=4)
     sim = Simulator(A40_NVLINK, noise=0.01, seed=0)
     base = sim.profile(wl, nccl_defaults(wl, A40_NVLINK))
-    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    cfgs, _, _ = tuner.search_workload(sim, wl)
     tuned = sim.profile(wl, cfgs)
     assert base.Z / tuned.Z > 1.0
 
@@ -142,7 +142,7 @@ def test_warm_start_fewer_profiles_same_quality():
     for warm in (False, True):
         sim = Simulator(hw, noise=0.01, seed=0)
         base = sim.profile(wl, nccl_defaults(wl, hw))
-        cfgs, iters, _ = tuner.tune_workload(sim, wl, warm_start=warm)
+        cfgs, iters, _ = tuner.search_workload(sim, wl, warm_start=warm)
         tuned = sim.profile(wl, cfgs)
         res[warm] = (base.Z / tuned.Z, iters)
     assert res[True][0] > res[False][0] - 0.02       # quality parity

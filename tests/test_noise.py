@@ -166,8 +166,8 @@ def test_default_noisy_tuning_identical_batched_vs_scalar_across_zoo():
     for name, wl in _zoo_workloads():
         s_ref = Simulator(TPU_V5E, noise=0.01, seed=0, batched=False)
         s_eng = Simulator(TPU_V5E, noise=0.01, seed=0)
-        r_ref = tuner.tune_workload(s_ref, wl)
-        r_eng = tuner.tune_workload(s_eng, wl)
+        r_ref = tuner.search_workload(s_ref, wl)
+        r_eng = tuner.search_workload(s_eng, wl)
         assert r_ref == r_eng, name
         assert s_ref.profile_count == s_eng.profile_count, name
 
@@ -228,9 +228,9 @@ def test_crn_schedules_identical_across_zoo():
             Simulator(TPU_V5E, noise=0.02, seed=1, noise_mode="crn"),
             Simulator(TPU_V5E, noise=0.02, seed=1, noise_mode="crn", batched=False),
         ]
-        shared = tuner.tune_workload(sims[0], wl, interleave=True)
-        serial = tuner.tune_workload(sims[1], wl, interleave=False)
-        scalar = tuner.tune_workload(sims[2], wl, interleave=True)
+        shared = tuner.search_workload(sims[0], wl, mode="interleaved")
+        serial = tuner.search_workload(sims[1], wl, mode="serial")
+        scalar = tuner.search_workload(sims[2], wl, mode="interleaved")
         assert shared == serial == scalar, name
         assert sims[0].profile_count == sims[1].profile_count, name
 
@@ -261,14 +261,14 @@ def test_crn_identical_groups_walk_identical_trajectories():
         layers=4,
     )
     sim = Simulator(A40_NVLINK, noise=0.05, seed=3, noise_mode="crn")
-    cfgs, iters, _ = tuner.tune_workload(sim, wl)
+    cfgs, iters, _ = tuner.search_workload(sim, wl)
     n0 = len(wl.groups[0].comms)
     # the four fwd layers are structurally identical
     layer_cfgs = [tuple(cfgs[(gi, ci)] for ci in range(n0)) for gi in range(4)]
     assert len(set(layer_cfgs)) == 1
     assert iters == sim.profile_count
     # ...while default mode legitimately diverges on the same workload
-    cfgs2, _, _ = tuner.tune_workload(Simulator(A40_NVLINK, noise=0.05, seed=3), wl)
+    cfgs2, _, _ = tuner.search_workload(Simulator(A40_NVLINK, noise=0.05, seed=3), wl)
     layer_cfgs2 = [tuple(cfgs2[(gi, ci)] for ci in range(n0)) for gi in range(4)]
     assert len(set(layer_cfgs2)) > 1
 
@@ -285,9 +285,9 @@ def test_crn_seed_reproducible_and_seed_sensitive():
     def make(s):
         return Simulator(A40_NVLINK, noise=0.03, seed=s, noise_mode="crn")
 
-    r1 = tuner.tune_workload(make(11), wl)
-    r2 = tuner.tune_workload(make(11), wl)
-    r3 = tuner.tune_workload(make(12), wl)
+    r1 = tuner.search_workload(make(11), wl)
+    r2 = tuner.search_workload(make(11), wl)
+    r3 = tuner.search_workload(make(12), wl)
     assert r1 == r2
     assert r1[2] != r3[2]  # different seed, different noisy traces
 
@@ -300,11 +300,11 @@ def test_crn_autoccl_shared_equals_serial():
         global_batch=16,
         layers=3,
     )
-    a1 = autoccl.tune_workload(
+    a1 = autoccl.search_workload(
         Simulator(TPU_V5E, noise=0.02, seed=1, noise_mode="crn"), wl
     )
-    a2 = autoccl.tune_workload(
-        Simulator(TPU_V5E, noise=0.02, seed=1, noise_mode="crn"), wl, interleave=False
+    a2 = autoccl.search_workload(
+        Simulator(TPU_V5E, noise=0.02, seed=1, noise_mode="crn"), wl, mode="serial"
     )
     assert a1 == a2
 

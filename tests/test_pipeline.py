@@ -55,6 +55,6 @@ def test_pp_workload_extract_and_tune():
     assert wl.num_comms == 2 * (8 + 8 - 1)     # fwd + bwd ticks
     sim = Simulator(TPU_V5E, noise=0.01, seed=0)
     base = sim.profile(wl, nccl_defaults(wl, TPU_V5E))
-    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    cfgs, _, _ = tuner.search_workload(sim, wl)
     tuned = sim.profile(wl, cfgs)
     assert tuned.Z <= base.Z * 1.02

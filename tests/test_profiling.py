@@ -142,8 +142,8 @@ def test_tuner_trajectory_identical_batched_vs_sequential(noise):
     wl = _small_workload()
     s_seq = Simulator(A40_NVLINK, noise=noise, seed=0, batched=False)
     s_bat = Simulator(A40_NVLINK, noise=noise, seed=0)
-    c1, i1, t1 = tuner.tune_workload(s_seq, wl)
-    c2, i2, t2 = tuner.tune_workload(s_bat, wl)
+    c1, i1, t1 = tuner.search_workload(s_seq, wl)
+    c2, i2, t2 = tuner.search_workload(s_bat, wl)
     assert c1 == c2
     assert i1 == i2
     assert len(t1) == len(t2)
@@ -153,18 +153,18 @@ def test_tuner_trajectory_identical_batched_vs_sequential(noise):
 
 def test_autoccl_identical_batched_vs_sequential():
     wl = _small_workload(layers=2)
-    a1 = autoccl.tune_workload(Simulator(A40_NVLINK, noise=0.01, seed=1,
+    a1 = autoccl.search_workload(Simulator(A40_NVLINK, noise=0.01, seed=1,
                                          batched=False), wl)
-    a2 = autoccl.tune_workload(Simulator(A40_NVLINK, noise=0.01, seed=1), wl)
+    a2 = autoccl.search_workload(Simulator(A40_NVLINK, noise=0.01, seed=1), wl)
     assert a1 == a2
 
 
 def test_cache_hits_do_not_change_tuned_configs():
     wl = _small_workload()
     sim = Simulator(A40_NVLINK, seed=0)
-    c1, i1, _ = tuner.tune_workload(sim, wl)
+    c1, i1, _ = tuner.search_workload(sim, wl)
     hits_before = sim.engine.cache.hits
-    c2, i2, _ = tuner.tune_workload(sim, wl)       # fully warm cache
+    c2, i2, _ = tuner.search_workload(sim, wl)       # fully warm cache
     assert c1 == c2
     assert i1 == i2                                # logical count unchanged
     assert sim.engine.cache.hits > hits_before
@@ -182,14 +182,14 @@ def test_structural_sharing_across_identical_layers():
     assert g0.name != g1.name
     assert group_fingerprint(g0) == group_fingerprint(g1)
     sim = Simulator(A40_NVLINK, seed=0)
-    cfgs, iters, _ = tuner.tune_workload(sim, wl)
+    cfgs, iters, _ = tuner.search_workload(sim, wl)
     eng = sim.engine
     physical = eng.cache.hits + eng.cache.misses + eng.dedup_shared
     assert physical < sim.profile_count    # shared trajectories: logical >
     assert iters == sim.profile_count      # ...but accounting is unchanged
     # the serial walk reuses through the measurement cache instead
     sim2 = Simulator(A40_NVLINK, seed=0)
-    c2, i2, _ = tuner.tune_workload(sim2, wl, interleave=False)
+    c2, i2, _ = tuner.search_workload(sim2, wl, mode="serial")
     assert sim2.engine.cache.hits > sim2.engine.cache.misses
     assert (c2, i2) == (cfgs, iters)
     n0 = len(wl.groups[0].comms)

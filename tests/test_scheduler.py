@@ -1,6 +1,6 @@
 """Cross-group interleaved tuning: the scheduler must be a pure
 re-scheduling of the serial group walk.  Deterministic mode: configs,
-traces, and ``profile_count`` byte-identical to ``interleave=False`` on
+traces, and ``profile_count`` byte-identical to ``mode="serial"`` on
 every multi-group model-zoo workload.  Noisy mode: results follow the
 documented RNG contract (jitter drawn in flat submission order) — they are
 seed-reproducible and identical between the batched engine and the
@@ -47,9 +47,9 @@ def test_interleaved_identical_to_serial_across_model_zoo():
     for name, wl in _zoo_workloads():
         assert len(wl.groups) >= 2, name
         s_ser = Simulator(TPU_V5E, seed=0)
-        c1, i1, t1 = tuner.tune_workload(s_ser, wl, interleave=False)
+        c1, i1, t1 = tuner.search_workload(s_ser, wl, mode="serial")
         s_int = Simulator(TPU_V5E, seed=0)
-        c2, i2, t2 = tuner.tune_workload(s_int, wl, interleave=True)
+        c2, i2, t2 = tuner.search_workload(s_int, wl, mode="interleaved")
         assert c1 == c2, name
         assert i1 == i2, name
         assert t1 == t2, name                       # byte-identical traces
@@ -60,10 +60,10 @@ def test_interleaved_identical_to_serial_warm_start():
     wl = extract_workload(get_config("llama3-8b"),
                           ParallelPlan(kind="fsdp", dp=8),
                           seq=2048, global_batch=16, layers=3)
-    r1 = tuner.tune_workload(Simulator(A40_NVLINK, seed=0), wl,
-                             warm_start=True, interleave=False)
-    r2 = tuner.tune_workload(Simulator(A40_NVLINK, seed=0), wl,
-                             warm_start=True, interleave=True)
+    r1 = tuner.search_workload(Simulator(A40_NVLINK, seed=0), wl,
+                             warm_start=True, mode="serial")
+    r2 = tuner.search_workload(Simulator(A40_NVLINK, seed=0), wl,
+                             warm_start=True, mode="interleaved")
     assert r1 == r2
 
 
@@ -74,16 +74,16 @@ def test_autoccl_interleaved_identical_to_serial():
                      ("phi2-2b", extract_workload(
             get_config("phi2-2b"), ParallelPlan(kind="fsdp", dp=8),
             seq=2048, global_batch=16, layers=2))):
-        a1 = autoccl.tune_workload(Simulator(TPU_V5E, seed=1), wl,
-                                   interleave=False)
-        a2 = autoccl.tune_workload(Simulator(TPU_V5E, seed=1), wl,
-                                   interleave=True)
+        a1 = autoccl.search_workload(Simulator(TPU_V5E, seed=1), wl,
+                                   mode="serial")
+        a2 = autoccl.search_workload(Simulator(TPU_V5E, seed=1), wl,
+                                   mode="interleaved")
         assert a1 == a2, name
 
 
 @pytest.mark.parametrize("tune", [
-    lambda sim, wl: tuner.tune_workload(sim, wl),
-    lambda sim, wl: autoccl.tune_workload(sim, wl),
+    lambda sim, wl: tuner.search_workload(sim, wl),
+    lambda sim, wl: autoccl.search_workload(sim, wl),
 ], ids=["lagom", "autoccl"])
 def test_noisy_interleaved_seed_reproducible(tune):
     """The RNG contract: same seed + same workload -> same results, and the
@@ -107,7 +107,7 @@ def test_noisy_mode_never_shares_trajectories():
                           ParallelPlan(kind="fsdp", dp=8),
                           seq=2048, global_batch=16, layers=4)
     sim = Simulator(A40_NVLINK, noise=0.05, seed=3)
-    cfgs, _, _ = tuner.tune_workload(sim, wl)
+    cfgs, _, _ = tuner.search_workload(sim, wl)
     n0 = len(wl.groups[0].comms)
     layer_cfgs = [tuple(cfgs[(gi, ci)] for ci in range(n0))
                   for gi in range(4)]         # the four fwd layers
@@ -159,7 +159,7 @@ def test_cache_stats_accessor():
                           ParallelPlan(kind="fsdp", dp=8),
                           seq=2048, global_batch=16, layers=2)
     sim = Simulator(A40_NVLINK, seed=0)
-    tuner.tune_workload(sim, wl)
+    tuner.search_workload(sim, wl)
     stats = sim.engine.cache_stats()
     for section in ("measurements", "columns"):
         for key in ("size", "hits", "misses", "evictions"):

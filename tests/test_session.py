@@ -1,0 +1,348 @@
+"""Session front door: ``tune() -> TunedPlan`` must be a pure repackaging
+of the per-method search paths (configs byte-identical for every method ×
+mode), and the plan a faithful portable artifact — JSON round-trips
+exactly, refuses structurally mismatched workloads, and lowers to the same
+runtime plan live, reloaded, and through the launchers' ``--tuned-plan``
+path.  Also covers the legacy ``tune_workload`` deprecation shims and the
+Simulator's eager argument validation."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (A40_NVLINK, ParallelPlan, PlanMismatchError,
+                        Simulator, TPU_V5E, TunedPlan, Workload,
+                        extract_workload, tune, workload_fingerprint)
+from repro.core import autoccl, baselines, session, tuner
+from repro.core.workload import CommOp, OverlapGroup, matmul_comp
+
+
+def _zoo():
+    """Three model-zoo workloads spanning the FSDP / EP / PP overlap
+    patterns (trimmed layers: structure, not scale, is under test)."""
+    return [
+        ("llama3-8b/fsdp", extract_workload(
+            get_config("llama3-8b"), ParallelPlan(kind="fsdp", dp=8),
+            seq=2048, global_batch=16, layers=2)),
+        ("deepseek-moe-16b/ep", extract_workload(
+            get_config("deepseek-moe-16b"), ParallelPlan(kind="ep", ep=8),
+            seq=2048, global_batch=16, layers=3)),
+        ("yi-34b/pp", extract_workload(
+            get_config("yi-34b"), ParallelPlan(kind="pp", pp=4,
+                                               microbatches=4),
+            seq=2048, global_batch=16)),
+    ]
+
+
+def _small_wl():
+    g = OverlapGroup("g", comps=[matmul_comp("mm", 2048, 2560, 5120)],
+                     comms=[CommOp("ar.x", "allreduce", 32e6, 8)])
+    return Workload("small", [g])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: tune() == the pre-redesign per-method paths, method × mode
+# ---------------------------------------------------------------------------
+
+def test_tune_matches_search_paths_every_method_and_mode():
+    for name, wl in _zoo():
+        for mode in ("serial", "interleaved", "shared"):
+            plan = tune(wl, TPU_V5E, method="lagom", mode=mode)
+            ref = tuner.search_workload(Simulator(TPU_V5E), wl, mode=mode)
+            assert plan.configs == ref[0], (name, mode)
+            assert plan.profile_count == ref[1], (name, mode)
+            assert plan.traces == ref[2], (name, mode)
+
+            aplan = tune(wl, TPU_V5E, method="autoccl", mode=mode)
+            aref = autoccl.search_workload(Simulator(TPU_V5E), wl, mode=mode)
+            assert aplan.configs == aref[0], (name, mode)
+            assert aplan.profile_count == aref[1], (name, mode)
+
+        nplan = tune(wl, TPU_V5E, method="nccl")
+        assert nplan.configs == baselines.nccl_defaults(wl, TPU_V5E)
+        assert nplan.profile_count == 0
+
+
+def test_tune_matches_legacy_tune_workload_shim():
+    wl = _small_wl()
+    plan = tune(wl, A40_NVLINK, noise=0.01, seed=0)
+    with pytest.warns(DeprecationWarning):
+        legacy = tuner.tune_workload(Simulator(A40_NVLINK, noise=0.01,
+                                               seed=0), wl)
+    assert plan.configs == legacy[0]
+    assert plan.profile_count == legacy[1]
+
+
+# ---------------------------------------------------------------------------
+# the artifact: JSON round-trip, fingerprint guard, runtime plan
+# ---------------------------------------------------------------------------
+
+def test_plan_json_roundtrip_across_zoo():
+    for name, wl in _zoo():
+        serial = tune(wl, TPU_V5E, mode="serial")
+        inter = tune(wl, TPU_V5E, mode="interleaved")
+        assert serial.configs == inter.configs, name
+        back = TunedPlan.from_json(inter.to_json())
+        assert back == inter, name                # full-artifact equality
+        assert back.configs == serial.configs, name     # byte-identical
+        assert back.fingerprint == workload_fingerprint(wl), name
+        # the deserialized plan lowers without the workload object, and to
+        # the same knobs as the live plan checked against the workload
+        assert back.runtime_plan() == inter.runtime_plan(wl), name
+
+
+def test_noisy_plan_roundtrip_preserves_traces():
+    import json
+
+    def reject_constant(c):
+        raise AssertionError(f"non-RFC JSON constant emitted: {c}")
+
+    wl = _zoo()[0][1]
+    for mode_kw in (dict(noise_mode="default"), dict(noise_mode="crn")):
+        plan = tune(wl, A40_NVLINK, noise=0.02, seed=7, **mode_kw)
+        text = plan.to_json()
+        # strict RFC JSON: the inf-H trace rows must not leak the bare
+        # ``Infinity`` token (jq/JS would reject the file)
+        json.loads(text, parse_constant=reject_constant)
+        back = TunedPlan.from_json(text)
+        assert back == plan                # traces (inf H, CommConfigs) too
+        assert back.noise == 0.02 and back.seed == 7
+
+
+def test_plan_save_load(tmp_path):
+    wl = _small_wl()
+    plan = tune(wl, TPU_V5E)
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    loaded = TunedPlan.load(path)
+    assert loaded == plan
+    assert session.load_plan(path) == plan
+    # activate() takes the plan object, a str path, or a PathLike
+    from repro.core.apply import activate
+    from repro.parallel import collectives
+    try:
+        assert activate(tmp_path / "plan.json") == plan.runtime_plan()
+    finally:
+        collectives.set_runtime_plan({})
+
+
+def test_plan_refuses_mismatched_workload():
+    _, wl = _zoo()[0]
+    other = extract_workload(get_config("llama3-8b"),
+                             ParallelPlan(kind="fsdp", dp=8), seq=1024,
+                             global_batch=16, layers=2)   # different shapes
+    plan = tune(wl, TPU_V5E)
+    assert plan.matches(wl) and not plan.matches(other)
+    with pytest.raises(PlanMismatchError):
+        plan.runtime_plan(other)
+    with pytest.raises(PlanMismatchError):
+        plan.evaluate(other)
+    with pytest.raises(PlanMismatchError):
+        plan.compare(tune(other, TPU_V5E, method="nccl"), wl)
+    plan.runtime_plan(wl)                 # matching workload is fine
+
+
+def test_plan_version_guard():
+    plan = tune(_small_wl(), TPU_V5E, method="nccl")
+    tampered = plan.to_json().replace('"version": 1', '"version": 99')
+    with pytest.raises(ValueError, match="version"):
+        TunedPlan.from_json(tampered)
+
+
+def test_compare_produces_speedup_row():
+    wl = _small_wl()
+    lag = tune(wl, A40_NVLINK)
+    base = tune(wl, A40_NVLINK, method="nccl")
+    row = lag.compare(base, wl)
+    assert row["method"] == "lagom" and row["baseline"] == "nccl"
+    assert row["speedup"] == pytest.approx(
+        row["baseline_z_ms"] / row["z_ms"])
+    assert row["speedup"] >= 0.98         # tuned never materially worse
+    assert row["profiles"] == lag.profile_count
+
+
+def test_launcher_tuned_plan_path_matches_in_process(tmp_path):
+    """--tuned-plan acceptance: load + lower + install through the launcher
+    helper == the in-process plan's runtime_plan."""
+    from repro.launch.plan import apply_tuned_plan
+    from repro.parallel import collectives
+
+    _, wl = _zoo()[0]
+    plan = tune(wl, A40_NVLINK)
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    try:
+        rt = apply_tuned_plan(path, quiet=True,
+                              expect_arch=wl.name.split(":")[0])
+        assert rt == plan.runtime_plan(wl)
+        for site, knobs in rt.items():
+            assert collectives.runtime_for(site) == knobs
+            # collective call sites that leave num_chunks unset defer to
+            # the installed plan; explicit values always win
+            assert collectives._resolve_chunks(None, site) == knobs.num_chunks
+            assert collectives._resolve_chunks(5, site) == 5
+        assert collectives.runtime_for("nonexistent").strategy == "xla"
+        # launching a different model against the plan warns loudly
+        with pytest.warns(RuntimeWarning, match="re-tune"):
+            apply_tuned_plan(path, quiet=True, expect_arch="phi2-2b")
+    finally:
+        collectives.set_runtime_plan({})
+    assert collectives._resolve_chunks(None, "ag") == 1   # plan cleared
+
+
+# ---------------------------------------------------------------------------
+# front-door ergonomics: registry, modes, simulator plumbing
+# ---------------------------------------------------------------------------
+
+def test_backend_registry_round_trip():
+    from repro.core.comm_params import CommConfig
+    from repro.core.workload import uniform_configs
+
+    @session.register_backend("unit-test-backend")
+    class FixedBackend:
+        def search(self, sim, wl, *, mode, **_):
+            return session.SearchOutcome(
+                uniform_configs(wl, CommConfig(nc=3)), 0, [])
+
+    try:
+        assert "unit-test-backend" in session.available_methods()
+        plan = tune(_small_wl(), TPU_V5E, method="unit-test-backend")
+        assert plan.method == "unit-test-backend"
+        assert all(c.nc == 3 for c in plan.configs.values())
+        with pytest.raises(ValueError, match="already registered"):
+            session.register_backend("unit-test-backend")(FixedBackend)
+    finally:
+        session.unregister_backend("unit-test-backend")
+    with pytest.raises(KeyError, match="unit-test-backend"):
+        tune(_small_wl(), TPU_V5E, method="unit-test-backend")
+
+
+def test_unknown_method_lists_registered():
+    with pytest.raises(KeyError, match="lagom"):
+        tune(_small_wl(), TPU_V5E, method="nope")
+
+
+def test_unknown_hardware_name_lists_profiles():
+    with pytest.raises(KeyError, match="tpu-v5e"):
+        tune(_small_wl(), "a40_nvlink")    # typo: underscore for dash
+
+
+def test_third_party_nested_traces_roundtrip():
+    from repro.core.comm_params import CommConfig
+    from repro.core.workload import uniform_configs
+
+    @session.register_backend("nested-trace-backend")
+    class NestedTraceBackend:
+        def search(self, sim, wl, *, mode):
+            traces = [{"cfgs": [CommConfig(nc=4)],
+                       "h_per_comm": [float("inf"), 1.0],
+                       "nested": {"best": CommConfig(nc=2)}}]
+            return session.SearchOutcome(
+                uniform_configs(wl, CommConfig()), 0, traces)
+
+    try:
+        plan = tune(_small_wl(), TPU_V5E, method="nested-trace-backend")
+        back = TunedPlan.from_json(plan.to_json())
+        assert back == plan
+        assert back.traces[0]["cfgs"][0] == CommConfig(nc=4)
+        assert back.traces[0]["h_per_comm"][0] == float("inf")
+        assert back.traces[0]["nested"]["best"] == CommConfig(nc=2)
+    finally:
+        session.unregister_backend("nested-trace-backend")
+
+
+def test_mode_validation():
+    wl = _small_wl()
+    with pytest.raises(ValueError, match="mode"):
+        tune(wl, TPU_V5E, mode="bogus")
+    # shared requires sharing soundness: rejected under default-mode noise,
+    # accepted under CRN
+    with pytest.raises(ValueError, match="shared"):
+        tune(wl, TPU_V5E, mode="shared", noise=0.01)
+    tune(wl, TPU_V5E, mode="shared", noise=0.01, noise_mode="crn")
+    # the rejection is uniform across methods, not just the built-in tuners
+    with pytest.raises(ValueError, match="shared"):
+        tune(wl, TPU_V5E, method="nccl", mode="shared", noise=0.01)
+
+
+def test_tune_simulator_plumbing():
+    wl = _small_wl()
+    sim = Simulator(TPU_V5E, noise=0.01, seed=5)
+    plan = tune(wl, simulator=sim)
+    assert plan.hardware == "tpu-v5e"
+    assert (plan.noise, plan.seed, plan.noise_mode) == (0.01, 5, "default")
+    with pytest.raises(ValueError, match="conflicts"):
+        tune(wl, A40_NVLINK, simulator=Simulator(TPU_V5E))
+    with pytest.raises(ValueError, match="hardware"):
+        tune(wl)
+    # simulator kwargs alongside simulator= would be silently shadowed
+    with pytest.raises(ValueError, match="simulator"):
+        tune(wl, simulator=Simulator(TPU_V5E), noise=0.05)
+    with pytest.raises(ValueError, match="simulator"):
+        tune(wl, simulator=Simulator(TPU_V5E), seed=9)
+    assert tune(wl, "tpu-v5e").configs == tune(wl, TPU_V5E).configs
+
+
+def test_tune_rejects_unknown_backend_options():
+    wl = _small_wl()
+    with pytest.raises(TypeError):
+        tune(wl, TPU_V5E, method="lagom", warm_star=True)    # typo
+    with pytest.raises(TypeError):
+        tune(wl, TPU_V5E, method="autoccl", warm_start=True)  # no such opt
+    with pytest.raises(TypeError):
+        tune(wl, TPU_V5E, method="nccl", warm_start=True)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: warn, and return the legacy tuple shapes bit-identically
+# ---------------------------------------------------------------------------
+
+def test_tuner_shim_warns_and_matches_bit_identically():
+    wl = _small_wl()
+    for interleave, mode in ((True, "interleaved"), (False, "serial")):
+        with pytest.warns(DeprecationWarning, match="session.tune"):
+            legacy = tuner.tune_workload(
+                Simulator(A40_NVLINK, noise=0.01, seed=2), wl,
+                interleave=interleave)
+        ref = tuner.search_workload(
+            Simulator(A40_NVLINK, noise=0.01, seed=2), wl, mode=mode)
+        assert isinstance(legacy, tuple) and len(legacy) == 3
+        assert legacy == ref
+
+
+def test_autoccl_shim_warns_and_matches_bit_identically():
+    wl = _small_wl()
+    for interleave, mode in ((True, "interleaved"), (False, "serial")):
+        with pytest.warns(DeprecationWarning, match="session.tune"):
+            legacy = autoccl.tune_workload(
+                Simulator(A40_NVLINK, noise=0.01, seed=2), wl,
+                interleave=interleave)
+        ref = autoccl.search_workload(
+            Simulator(A40_NVLINK, noise=0.01, seed=2), wl, mode=mode)
+        assert isinstance(legacy, tuple) and len(legacy) == 2
+        assert legacy == ref
+
+
+# ---------------------------------------------------------------------------
+# eager Simulator argument validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [1.5, "0", True, None])
+def test_simulator_rejects_bad_seed(bad):
+    with pytest.raises(ValueError, match="seed"):
+        Simulator(TPU_V5E, seed=bad)
+
+
+@pytest.mark.parametrize("bad", [-0.01, float("nan"), float("inf"), "0.1",
+                                 True])
+def test_simulator_rejects_bad_noise(bad):
+    with pytest.raises(ValueError, match="noise"):
+        Simulator(TPU_V5E, noise=bad)
+
+
+def test_simulator_accepts_valid_args():
+    import numpy as np
+
+    Simulator(TPU_V5E, noise=0.0, seed=0)
+    Simulator(TPU_V5E, noise=0.5, seed=123)
+    # numpy scalars are valid Integral/Real values and flowed fine before
+    # the eager checks existed — they must keep working
+    Simulator(TPU_V5E, noise=np.float32(0.01), seed=np.int64(7))

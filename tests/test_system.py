@@ -33,7 +33,7 @@ def test_full_pipeline_tune_apply():
                           global_batch=256, layers=4)
     sim = Simulator(TPU_V5E, noise=0.01, seed=0)
     base = sim.profile(wl, nccl_defaults(wl, TPU_V5E))
-    cfgs, iters, trace = tuner.tune_workload(sim, wl)
+    cfgs, iters, trace = tuner.search_workload(sim, wl)
     tuned = sim.profile(wl, cfgs)
     assert tuned.Z <= base.Z * 1.02       # never materially worse
     rt = runtime_plan(wl, cfgs)
