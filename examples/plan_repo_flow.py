@@ -1,0 +1,47 @@
+"""Plan repository flow: tune once into a repository, relaunch resolves it.
+
+1. Builds the Llama-3-8B (smoke) FSDP workload and tunes it with
+   ``tune(..., repo=...)`` — the resulting ``TunedPlan`` is auto-``put``
+   into a ``PlanRepository`` under its (workload structural fingerprint,
+   hardware) key.
+2. Relaunches training with ``--plan-repo``: the launcher rebuilds the
+   workload from (arch × parallel spec × shape), resolves the exact key,
+   and installs the stored plan with ZERO tuning work at startup.
+3. Asserts the installed per-site knobs are exactly the stored plan's
+   lowering.
+
+    PYTHONPATH=src python examples/plan_repo_flow.py
+"""
+import tempfile
+
+from repro.configs import get_smoke_config
+from repro.core import ParallelPlan, PlanRepository, extract_workload, tune
+from repro.launch import train
+from repro.parallel import collectives
+
+repo_dir = tempfile.mkdtemp(prefix="lagom-plan-repo-")
+cfg = get_smoke_config("llama3-8b")
+parallel = ParallelPlan(kind="fsdp", dp=8)
+wl = extract_workload(cfg, parallel, seq=64, global_batch=4)
+
+# 1. tune once; the plan lands in the repository automatically
+plan = tune(wl, "tpu-v5e", method="lagom", repo=repo_dir)
+entries = PlanRepository(repo_dir).entries()
+print(f"repository {repo_dir}: {[(fp[:12] + '…', hw) for fp, hw, _ in entries]}")
+
+# 2. relaunch: --plan-repo auto-resolves the matching (fingerprint,
+#    hardware) entry — no tuning happens at startup
+argv = ["--arch", "llama3-8b", "--smoke", "--steps", "2"]
+argv += ["--seq", "64", "--batch", "4"]
+argv += ["--plan-repo", repo_dir]
+argv += ["--plan-parallel", "fsdp:8", "--plan-hardware", "tpu-v5e"]
+train.main(argv)
+
+# 3. the launcher installed exactly the stored plan's per-site lowering
+rt = plan.runtime_plan(wl)
+assert collectives.active_runtime_plan() == rt, "repo plan was not installed"
+per_site = {k: v for k, v in rt.items() if k.startswith("fsdp.layer")}
+print(
+    f"installed {len(rt)} addressable site entries "
+    f"({len(per_site)} per-layer fsdp sites) — zero tuning at launch"
+)

@@ -45,8 +45,12 @@ reloaded = TunedPlan.load(path)
 assert reloaded.configs == lag.configs             # byte-identical configs
 rt = reloaded.runtime_plan(wl)                     # fingerprint-checked
 print(f"\nplan saved + reloaded: {path}")
-print("runtime plan:",
-      {k: (v.strategy, v.num_chunks) for k, v in sorted(rt.items())})
+per_layer = sorted(k for k in rt if k.startswith("fsdp.layer"))
+print(f"runtime plan: {len(rt)} addressable site entries "
+      f"(per-layer sites like {per_layer[0]} … {per_layer[-1]}); "
+      "class fallbacks:",
+      {k: (v.strategy, v.num_chunks) for k, v in sorted(rt.items())
+       if "." not in k})
 print("re-apply at launch:  python -m repro.launch.train --arch llama3-8b "
       f"--smoke --tuned-plan {path}")
 

@@ -28,7 +28,16 @@ wl = extract_workload(cfg, plan, seq=4096, global_batch=256)
 tuned = tune(wl, TPU_V5E, method="lagom", noise=0.01, seed=0)
 from repro.core.apply import activate
 rt = activate(tuned)          # install: collective call sites now see it
-print("tuned runtime plan:", {k: (v.strategy, v.num_chunks) for k, v in rt.items()})
+print(f"tuned runtime plan: {len(rt)} addressable site entries; class "
+      "fallbacks:", {k: (v.strategy, v.num_chunks) for k, v in rt.items()
+                     if "." not in k})
+
+# every comm site is individually addressable: the EP workload's layer-0
+# dispatch site resolves through the per-site hierarchy
+from repro.parallel.collectives import explain_runtime
+knobs, src = explain_runtime("ep.layer0.moe.a2a_disp.fwd.h0")
+print(f"site ep.layer0.moe.a2a_disp.fwd.h0 -> {knobs.strategy}/"
+      f"x{knobs.num_chunks} (matched plan key {src!r})")
 
 a2a = rt.get("a2a")
 from repro.launch.mesh import make_mesh

@@ -16,10 +16,13 @@
   apply       — tuned configs -> JAX runtime knobs (chunked collectives)
   session     — the front door: tune(...) -> TunedPlan (portable artifact)
                 + the SearchBackend registry
+  plan_repo   — PlanRepository: (fingerprint × hardware) plan store for
+                automatic reuse at launch (--plan-repo)
 """
 from repro.core.comm_params import CommConfig, min_config, vendor_default
 from repro.core.extract import ParallelPlan, extract_workload
 from repro.core.hardware import A40_NVLINK, A40_PCIE, PROFILES, TPU_V5E, Hardware
+from repro.core.plan_repo import PlanRepoError, PlanRepository
 from repro.core.session import (PlanMismatchError, SearchBackend,
                                 SearchOutcome, TunedPlan, available_methods,
                                 register_backend, tune, workload_fingerprint)
@@ -35,4 +38,5 @@ __all__ = [
     "tune", "TunedPlan", "PlanMismatchError", "SearchBackend",
     "SearchOutcome", "register_backend", "available_methods",
     "workload_fingerprint",
+    "PlanRepository", "PlanRepoError",
 ]

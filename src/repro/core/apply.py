@@ -9,6 +9,17 @@ in ``parallel.collectives`` and their chunk counts, then re-lowering.
                "chunked" scan of partial collectives, vendor default -> xla
   nc        -> no HLO footprint (DMA concurrency); consumed by the
                simulator and recorded for deployment (XLA flags).
+
+The lowered plan is **per-site**: every tunable comm site's stable dotted
+SiteId (``fsdp.layer3.ag_params``, ``tp.layer1.mlp.ar.fwd.mb0``, ...)
+maps to its own ``CollectiveRuntime``, and every dotted *prefix* of a
+SiteId is registered as a fallback entry (first site wins), down to the
+legacy coarse class buckets (``"ag"``/``"rs"``/``"ar"``/``"a2a"``/
+``"p2p"``).  Model-builder call sites address the plan at whatever
+granularity they know (``tp.layer1.mlp`` covers both the layer's ag and
+rs), and ``collectives.runtime_for`` walks the same hierarchy — so two
+layers of one model can resolve to different chunk structure while legacy
+class-keyed callers keep getting the exact knobs they always did.
 """
 from __future__ import annotations
 
@@ -38,34 +49,43 @@ def to_runtime(cfg: CommConfig, payload_bytes: float) -> CollectiveRuntime:
 
 def site_runtime_plan(sites: List[Dict],
                       configs: ConfigSet) -> Dict[str, CollectiveRuntime]:
-    """Per-site runtime plan keyed by the CommOp name prefix (site class);
+    """Per-site runtime plan keyed by SiteId, with hierarchical fallback
+    entries at every dotted prefix plus the legacy class buckets;
     ``sites`` is ``workload.comm_site_meta`` metadata (live or deserialized
-    from a ``TunedPlan``).  Sites without a tuned config are skipped."""
+    from a ``TunedPlan``).  Sites without a tuned config are skipped.
+    ``setdefault`` everywhere: the first site contributing to a prefix (or
+    class) wins, which keeps the class-bucket knobs bit-identical to the
+    pre-per-site three-knob plans."""
     plan: Dict[str, CollectiveRuntime] = {}
     for s in sites:
         cfg = configs.get((s["group"], s["comm"]))
         if cfg is None:
             continue
-        key = s["name"].split(".")[0]      # ag / rs / ar / a2a site class
-        plan.setdefault(key, to_runtime(cfg, s["bytes"]))
+        rt = to_runtime(cfg, s["bytes"])
+        sid = s.get("site") or s["name"]
+        parts = sid.split(".")
+        for k in range(len(parts), 0, -1):
+            plan.setdefault(".".join(parts[:k]), rt)
+        plan.setdefault(s["name"].split(".")[0], rt)   # ag / rs / ar / a2a / p2p
     return plan
 
 
 def runtime_plan(wl: Workload, configs: ConfigSet) -> Dict[str, CollectiveRuntime]:
-    """Per-site runtime plan keyed by the CommOp name prefix (site class)."""
+    """Per-site runtime plan (see ``site_runtime_plan``) for a live workload."""
     return site_runtime_plan(comm_site_meta(wl), configs)
 
 
 def activate(plan) -> Dict[str, CollectiveRuntime]:
     """Lower a ``session.TunedPlan`` (object or path to its JSON) to runtime
-    knobs and install them as the process-wide active plan
+    knobs and install them as the process-wide base plan
     (``parallel.collectives.runtime_for``).  Returns the runtime plan —
-    what the launchers' ``--tuned-plan`` flag applies at startup."""
+    what the launchers' ``--tuned-plan`` flag applies at startup.  For a
+    scoped install, use ``TunedPlan.applied()`` instead."""
     from repro.core.session import TunedPlan
     from repro.parallel import collectives
 
     if isinstance(plan, (str, os.PathLike)):
         plan = TunedPlan.load(plan)
     rt = plan.runtime_plan()
-    collectives.set_runtime_plan(rt)
+    collectives.install_runtime_plan(rt)
     return rt

@@ -116,14 +116,17 @@ def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
         for i in range(L):
             groups.append(OverlapGroup(
                 f"fwd.L{i}", comps=list(comp),
-                comms=[CommOp(f"ag.L{i + 1}", "allgather", pbytes, n)]))
+                comms=[CommOp(f"ag.L{i + 1}", "allgather", pbytes, n,
+                              site=f"fsdp.layer{i + 1}.ag_params")]))
         if not decode:
             bcomp = _scale(comp, 2.0, ".bwd")
             for i in range(L):
                 groups.append(OverlapGroup(
                     f"bwd.L{i}", comps=list(bcomp),
-                    comms=[CommOp(f"ag.L{i - 1}", "allgather", pbytes, n),
-                           CommOp(f"rs.L{i}", "reducescatter", pbytes, n)]))
+                    comms=[CommOp(f"ag.L{i - 1}", "allgather", pbytes, n,
+                                  site=f"fsdp.layer{i - 1}.ag_params.bwd"),
+                           CommOp(f"rs.L{i}", "reducescatter", pbytes, n,
+                                  site=f"fsdp.layer{i}.rs_grads")]))
 
     elif plan.kind == "tp":
         n = plan.tp
@@ -140,12 +143,16 @@ def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
                     f"{pname}.L{i}.attn",
                     comps=_scale(attn, s * mb, f".{pname}"),
                     comms=[CommOp(f"ar.attn.{pname}.L{i}.mb{b}", "allreduce",
-                                  ar_bytes * s, n) for b in range(mb)]))
+                                  ar_bytes * s, n,
+                                  site=f"tp.layer{i}.attn.ar.{pname}.mb{b}")
+                           for b in range(mb)]))
                 groups.append(OverlapGroup(
                     f"{pname}.L{i}.mlp",
                     comps=_scale(mlp, s * mb, f".{pname}"),
                     comms=[CommOp(f"ar.mlp.{pname}.L{i}.mb{b}", "allreduce",
-                                  ar_bytes * s, n) for b in range(mb)]))
+                                  ar_bytes * s, n,
+                                  site=f"tp.layer{i}.mlp.ar.{pname}.mb{b}")
+                           for b in range(mb)]))
 
     elif plan.kind == "pp":
         # GPipe fill+drain: per tick, each stage's compute overlaps the
@@ -166,7 +173,8 @@ def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
                     f"{pname}.tick{t}",
                     comps=_scale(stage_comp, s, f".{pname}"),
                     comms=[CommOp(f"p2p.{pname}.t{t}", "permute",
-                                  act_bytes * s, n)]))
+                                  act_bytes * s, n,
+                                  site=f"pp.tick{t}.p2p.{pname}")]))
 
     elif plan.kind == "ep":
         n = plan.ep
@@ -186,7 +194,8 @@ def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
                     f"{pname}.L{i}.moe",
                     comps=_scale(experts, s * halves, f".{pname}"),
                     comms=[CommOp(f"a2a.{d}.{pname}.L{i}.h{h}", "alltoall",
-                                  a2a_bytes * s, n)
+                                  a2a_bytes * s, n,
+                                  site=f"ep.layer{i}.moe.a2a_{d}.{pname}.h{h}")
                            for h in range(halves) for d in ("disp", "comb")]))
     else:
         raise ValueError(plan.kind)

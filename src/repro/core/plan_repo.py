@@ -1,0 +1,125 @@
+"""PlanRepository: a directory store of ``TunedPlan`` artifacts keyed on
+(workload structural fingerprint × hardware name).
+
+The paper's deployment story is "co-tune once, deploy the plan"; the
+repository is the *once* made operational.  ``session.tune(..., repo=...)``
+auto-``put``s every tuned plan, and the launchers' ``--plan-repo`` flag
+``resolve``s the current (workload, hardware) pair at startup — a hit
+installs the stored plan with zero tuning work, a miss launches untuned
+with a warning.
+
+Layout: one strict-RFC JSON file per key, named
+``<fingerprint>__<hardware>.json`` (the fingerprint is the sha256 hex
+``session.workload_fingerprint`` emits; hardware is ``Hardware.name``).
+``get`` re-verifies the loaded plan's own provenance against the key and
+refuses misfiled or tampered entries (``PlanRepoError``) rather than
+installing configs tuned for a different structure.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable, List, Optional, Tuple, Union
+
+from repro.core.hardware import Hardware
+from repro.core.session import TunedPlan, workload_fingerprint
+from repro.core.workload import Workload
+
+
+class PlanRepoError(ValueError):
+    """A repository entry's content does not match its (fingerprint,
+    hardware) key — misfiled, tampered, or hand-edited; refuse to apply."""
+
+
+def _hw_name(hardware: Union[Hardware, str]) -> str:
+    return hardware.name if isinstance(hardware, Hardware) else str(hardware)
+
+
+class PlanRepository:
+    """Directory-backed ``TunedPlan`` store keyed on (fingerprint, hardware)."""
+
+    def __init__(self, root: Union[str, os.PathLike]):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- keys --------------------------------------------------------------
+    def path_for(self, fingerprint: str, hardware: Union[Hardware, str]) -> str:
+        return os.path.join(self.root, f"{fingerprint}__{_hw_name(hardware)}.json")
+
+    def entries(self) -> List[Tuple[str, str, str]]:
+        """Sorted ``(fingerprint, hardware, path)`` rows for every entry."""
+        rows = []
+        for fn in sorted(os.listdir(self.root)):
+            if fn.endswith(".json") and "__" in fn:
+                fp, hw = fn[: -len(".json")].split("__", 1)
+                rows.append((fp, hw, os.path.join(self.root, fn)))
+        return rows
+
+    def __len__(self) -> int:
+        return len(self.entries())
+
+    def __contains__(self, key: Iterable[str]) -> bool:
+        fp, hw = key
+        return os.path.exists(self.path_for(fp, hw))
+
+    # -- store / fetch -----------------------------------------------------
+    def put(self, plan: TunedPlan, *, overwrite: bool = True) -> str:
+        """Store ``plan`` under its own (fingerprint, hardware) provenance;
+        returns the entry path."""
+        path = self.path_for(plan.fingerprint, plan.hardware)
+        if not overwrite and os.path.exists(path):
+            raise FileExistsError(
+                f"plan repository already holds an entry for "
+                f"({plan.fingerprint[:12]}…, {plan.hardware}); pass "
+                "overwrite=True to replace it"
+            )
+        # atomic publish: an interrupted tune must never leave a truncated
+        # entry that later launches trip over
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            plan.save(tmp)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+        return path
+
+    def get(
+        self, fingerprint: str, hardware: Union[Hardware, str]
+    ) -> Optional[TunedPlan]:
+        """The stored plan for the key, or ``None`` on a miss (including a
+        stale-hardware miss: same fingerprint tuned for other hardware).
+        Raises ``PlanRepoError`` when the entry's own provenance disagrees
+        with the key it is filed under."""
+        hw = _hw_name(hardware)
+        path = self.path_for(fingerprint, hw)
+        if not os.path.exists(path):
+            return None
+        try:
+            plan = TunedPlan.load(path)
+        except (ValueError, KeyError, TypeError) as e:
+            raise PlanRepoError(
+                f"repository entry {path} is not a readable TunedPlan "
+                f"({type(e).__name__}: {e}) — truncated or corrupt; "
+                "delete it or re-put"
+            ) from e
+        if plan.fingerprint != fingerprint or plan.hardware != hw:
+            raise PlanRepoError(
+                f"repository entry {path} is filed under "
+                f"({fingerprint[:12]}…, {hw}) but carries provenance "
+                f"({plan.fingerprint[:12]}…, {plan.hardware}) — refusing "
+                "to apply a misfiled/tampered plan; re-tune or re-put"
+            )
+        return plan
+
+    def resolve(
+        self, wl: Workload, hardware: Union[Hardware, str]
+    ) -> Optional[TunedPlan]:
+        """The stored plan matching ``wl``'s structural fingerprint on
+        ``hardware``, or ``None`` — the launch-time lookup."""
+        return self.get(workload_fingerprint(wl), hardware)
+
+
+def as_repository(repo: Union[str, os.PathLike, PlanRepository]) -> PlanRepository:
+    """Coerce a directory path (or an existing repository) to a
+    ``PlanRepository`` — what ``session.tune(repo=...)`` accepts."""
+    return repo if isinstance(repo, PlanRepository) else PlanRepository(repo)

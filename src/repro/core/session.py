@@ -42,6 +42,7 @@ byte-identical configs under all three.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import math
@@ -253,14 +254,77 @@ class TunedPlan:
 
     # -- apply / evaluate / compare ---------------------------------------
     def runtime_plan(self, wl: Optional[Workload] = None) -> Dict:
-        """Lower to per-site-class JAX runtime knobs (``core.apply``).
-        Self-contained via the embedded site metadata; pass the workload
-        to assert it structurally matches before applying."""
+        """Lower to per-site JAX runtime knobs (``core.apply``): one
+        ``CollectiveRuntime`` per SiteId plus hierarchical prefix/class
+        fallback entries, so two comm sites of one model can carry
+        different chunk structure.  Self-contained via the embedded site
+        metadata; pass the workload to assert it structurally matches
+        before applying."""
         from repro.core import apply as apply_mod  # lazy: apply pulls in jax
 
         if wl is not None:
             self.check(wl)
         return apply_mod.site_runtime_plan(self.sites, self.configs)
+
+    @contextlib.contextmanager
+    def applied(self, wl: Optional[Workload] = None):
+        """Scope this plan's runtime knobs to a ``with`` block::
+
+            with plan.applied():
+                y = ring_ag_matmul(...)     # sites resolve against plan
+
+        Nested ``applied()`` scopes shadow (innermost wins) and every exit
+        path — normal or exceptional — restores the prior state; the
+        process-global install (``core.apply.activate`` / the launchers'
+        ``--tuned-plan``) stays untouched underneath.  Yields the lowered
+        runtime plan."""
+        from repro.parallel import collectives   # lazy: pulls in jax
+
+        rt = self.runtime_plan(wl)
+        with collectives.use_runtime_plan(rt):
+            yield rt
+
+    # -- diffing -----------------------------------------------------------
+    def diff(self, other: "TunedPlan") -> Dict:
+        """Field-level config deltas vs ``other``, per site and only for
+        changed fields::
+
+            {"changed":    {site_id: {field: [self_val, other_val]}},
+             "only_self":  [site_id, ...],   # sites other has no config for
+             "only_other": [site_id, ...],
+             "meta":       {field: [self_val, other_val]}}   # provenance
+
+        Sites are labeled by SiteId (falling back to ``group:comm`` when a
+        site is missing from the embedded metadata — e.g. diffing against
+        a plan from a structurally different workload)."""
+        def labels(plan):
+            return {(s["group"], s["comm"]): s.get("site") or s["name"]
+                    for s in plan.sites}
+
+        lab = labels(self)
+        lab.update({k: v for k, v in labels(other).items() if k not in lab})
+        changed: Dict[str, Dict] = {}
+        only_self: List[str] = []
+        only_other: List[str] = []
+        for key in sorted(set(self.configs) | set(other.configs)):
+            sid = lab.get(key, f"{key[0]}:{key[1]}")
+            a, b = self.configs.get(key), other.configs.get(key)
+            if b is None:
+                only_self.append(sid)
+                continue
+            if a is None:
+                only_other.append(sid)
+                continue
+            delta = {f: [getattr(a, f), getattr(b, f)] for f in _CFG_FIELDS
+                     if getattr(a, f) != getattr(b, f)}
+            if delta:
+                changed[sid] = delta
+        meta = {f: [getattr(self, f), getattr(other, f)]
+                for f in ("method", "mode", "hardware", "workload",
+                          "fingerprint", "seed", "noise", "noise_mode")
+                if getattr(self, f) != getattr(other, f)}
+        return {"changed": changed, "only_self": only_self,
+                "only_other": only_other, "meta": meta}
 
     def _hw(self) -> Hardware:
         try:
@@ -354,7 +418,7 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
          method: str = "lagom", mode: str = "interleaved",
          noise: float = 0.0, noise_mode: str = "default", seed: int = 0,
          batched: bool = True, simulator: Optional[Simulator] = None,
-         **options) -> TunedPlan:
+         repo=None, **options) -> TunedPlan:
     """Tune ``workload``'s collectives for ``hardware`` and return the
     result as a portable ``TunedPlan``.
 
@@ -367,7 +431,10 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
     with the same simulator arguments.  Pass ``simulator=`` to reuse RNG
     state / engine caches instead (``hardware`` may then be omitted, and
     the simulator kwargs must stay unset — they would be silently shadowed
-    otherwise, so that is rejected).  Remaining keyword ``options`` go to
+    otherwise, so that is rejected).  ``repo`` (a directory path or
+    ``plan_repo.PlanRepository``) auto-``put``s the tuned plan under its
+    (fingerprint, hardware) key so later launches with ``--plan-repo``
+    resolve it with zero tuning work.  Remaining keyword ``options`` go to
     the backend (e.g. Lagom's ``warm_start``)."""
     backend = get_backend(method)
     if simulator is not None:
@@ -395,13 +462,17 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
     outcome = backend.search(sim, workload, mode=mode, **options)
     stats = (sim.engine.cache_stats()
              if sim.batched and sim._engine is not None else None)
-    return TunedPlan(
+    plan = TunedPlan(
         method=method, mode=mode, hardware=sim.hw.name,
         workload=workload.name, fingerprint=workload_fingerprint(workload),
         seed=sim.seed, noise=sim.noise, noise_mode=sim.noise_mode,
         configs=dict(outcome.configs), sites=comm_site_meta(workload),
         profile_count=outcome.profile_count, traces=list(outcome.traces),
         cache_stats=stats)
+    if repo is not None:
+        from repro.core.plan_repo import as_repository
+        as_repository(repo).put(plan)
+    return plan
 
 
 __all__ = [
@@ -410,3 +481,52 @@ __all__ = [
     "load_plan", "register_backend", "tune", "unregister_backend",
     "workload_fingerprint",
 ]
+
+
+# ---------------------------------------------------------------------------
+# CLI:  python -m repro.core.session diff a.json b.json
+# ---------------------------------------------------------------------------
+
+def _format_diff(a_path: str, b_path: str, d: Dict) -> str:
+    lines = [f"plan diff: {a_path} vs {b_path}"]
+    for f, (va, vb) in sorted(d["meta"].items()):
+        lines.append(f"  meta {f}: {va!r} -> {vb!r}")
+    if not d["changed"] and not d["only_self"] and not d["only_other"]:
+        lines.append("  configs: identical")
+        return "\n".join(lines)
+    for sid, delta in d["changed"].items():
+        fields_ = ", ".join(f"{f}: {va!r} -> {vb!r}"
+                            for f, (va, vb) in sorted(delta.items()))
+        lines.append(f"  {sid}: {fields_}")
+    for sid in d["only_self"]:
+        lines.append(f"  {sid}: only in {a_path}")
+    for sid in d["only_other"]:
+        lines.append(f"  {sid}: only in {b_path}")
+    lines.append(f"  ({len(d['changed'])} site(s) changed, "
+                 f"{len(d['only_self'])} only-left, "
+                 f"{len(d['only_other'])} only-right)")
+    return "\n".join(lines)
+
+
+def _main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.session",
+        description="TunedPlan artifact tooling")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    d = sub.add_parser("diff", help="field-level per-site config deltas "
+                                    "between two saved plans")
+    d.add_argument("a", help="baseline plan JSON")
+    d.add_argument("b", help="comparison plan JSON")
+    args = ap.parse_args(argv)
+    if args.cmd == "diff":
+        delta = TunedPlan.load(args.a).diff(TunedPlan.load(args.b))
+        print(_format_diff(args.a, args.b, delta))
+        return 0 if not (delta["changed"] or delta["only_self"]
+                         or delta["only_other"] or delta["meta"]) else 1
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

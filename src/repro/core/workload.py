@@ -38,9 +38,15 @@ class CommOp:
     kind: str                  # one of COMM_KINDS
     bytes: float               # payload per chip
     group_size: int = 8        # participating chips on its mesh axis
+    site: str = ""             # stable dotted SiteId (runtime addressing);
+                               # defaults to ``name`` when unset
 
     def __post_init__(self):
         assert self.kind in COMM_KINDS, self.kind
+
+    @property
+    def site_id(self) -> str:
+        return self.site or self.name
 
 
 @dataclass
@@ -84,9 +90,11 @@ def comm_site_meta(wl: Workload) -> List[Dict]:
     """Portable per-site metadata — everything ``core.apply`` reads from
     the workload when lowering configs to runtime knobs, in a JSON-safe
     shape.  ``session.TunedPlan`` embeds this so a saved plan can be
-    re-applied without rebuilding the workload it was tuned on."""
+    re-applied without rebuilding the workload it was tuned on.  ``site``
+    is the stable dotted SiteId runtime call sites address
+    (``collectives.runtime_for``)."""
     return [dict(group=gi, comm=ci, name=op.name, kind=op.kind,
-                 bytes=op.bytes, group_size=op.group_size)
+                 bytes=op.bytes, group_size=op.group_size, site=op.site_id)
             for gi, g in enumerate(wl.groups)
             for ci, op in enumerate(g.comms)]
 

@@ -247,7 +247,21 @@ def main(argv=None):
     ap.add_argument("--cache-dtype", default="",
                     help="KV/state cache dtype override (e.g. float8_e4m3fn)")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--tuned-plan", default=None,
+                    help="saved session.TunedPlan JSON: install it and print "
+                         "the resolved per-site runtime table (site id -> "
+                         "knobs -> source plan key) before compiling, so "
+                         "operators can audit what the plan actually "
+                         "changes at launch")
     args = ap.parse_args(argv)
+
+    if args.tuned_plan:
+        from repro.core.apply import activate
+        from repro.core.session import TunedPlan
+        from repro.launch.plan import print_runtime_table
+        plan = TunedPlan.load(args.tuned_plan)
+        activate(plan)
+        print_runtime_table(plan)
 
     archs = [args.arch] if args.arch else ASSIGNED_ARCHS
     shapes = [args.shape] if args.shape else list(INPUT_SHAPES)

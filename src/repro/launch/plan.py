@@ -1,29 +1,38 @@
-"""Launcher-side ``TunedPlan`` application (the ``--tuned-plan`` flag).
+"""Launcher-side ``TunedPlan`` application (``--tuned-plan`` /
+``--plan-repo``).
 
 "Co-tune once, deploy the plan": a plan saved by ``session.tune(...)``
-(``plan.save("plan.json")``) is loaded at launch, lowered to per-site-class
+(``plan.save("plan.json")``) — or auto-stored in a ``PlanRepository``
+(``tune(..., repo=...)``) — is loaded at launch, lowered to per-site
 collective runtime knobs via ``core.apply``, and installed process-wide
 (``parallel.collectives.runtime_for``).
 
-Reach, stated plainly: the knobs apply to the explicit chunked-collective
-helpers (``ring_ag_matmul`` / ``mm_reduce_scatter`` / ``chunked_all_to_all``
-with ``num_chunks`` unset — see examples/tune_then_lower.py).  The stock
-jit/GSPMD model path does not route through those helpers yet, so its HLO
-is unchanged by a plan; wiring ``runtime_for`` into the sharded model
-builders is the ROADMAP follow-up.
+Reach: the knobs apply to every explicit chunked-collective call site —
+``ring_ag_matmul`` / ``mm_reduce_scatter`` / ``chunked_all_to_all`` /
+the pipeline's inter-stage transfers — addressed per SiteId, including
+the plan-aware model-builder path (``models.dense.trunk_fwd(mesh=...)``
+emits per-layer sites ``tp.layer{i}.mlp`` / ``ep.layer{j}.moe``), so one
+plan can change two layers' emitted chunk structure differently.  The
+stock GSPMD scan trunk (no mesh handed to the model) is still untouched
+by a plan.
 
-The launcher has no ``Workload`` object, so the plan's structural
-fingerprint cannot be verified here (that guard runs in
-``TunedPlan.runtime_plan(wl)`` whenever the workload is in hand); the
-model-name cross-check below is the launch-time proxy for it.
+The launcher has no ``Workload`` object on the ``--tuned-plan`` path, so
+the plan's structural fingerprint cannot be verified there (that guard
+runs in ``TunedPlan.runtime_plan(wl)`` whenever the workload is in hand);
+the model-name cross-check below is the launch-time proxy for it.  The
+``--plan-repo`` path *does* rebuild the workload (arch × parallel spec ×
+shape) and resolves by exact (fingerprint, hardware) key — a hit installs
+the stored plan with zero tuning work, a miss warns and launches untuned.
 """
 from __future__ import annotations
 
 import warnings
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.apply import activate
-from repro.core.session import TunedPlan
+from repro.core.extract import ParallelPlan, extract_workload
+from repro.core.plan_repo import PlanRepoError, PlanRepository
+from repro.core.session import TunedPlan, workload_fingerprint
 
 
 def apply_tuned_plan(path: str, *, expect_arch: Optional[str] = None,
@@ -32,22 +41,111 @@ def apply_tuned_plan(path: str, *, expect_arch: Optional[str] = None,
     (identical to ``TunedPlan.load(path).runtime_plan()``).  When
     ``expect_arch`` is given and does not match the model the plan was
     tuned on, a ``RuntimeWarning`` is emitted (the plan still applies —
-    site-class knobs are coarse — but the tuning is unsound for a
+    fallback knobs are coarse — but the tuning is unsound for a
     different model; re-tune)."""
     plan = TunedPlan.load(path)
     tuned_model = plan.workload.split(":")[0]
     if expect_arch is not None and tuned_model != expect_arch:
         warnings.warn(
             f"tuned plan {path} was tuned on workload {plan.workload!r} "
-            f"but this launch runs arch {expect_arch!r} — site-class knobs "
+            f"but this launch runs arch {expect_arch!r} — site knobs "
             "may not correspond; re-tune for this model",
             RuntimeWarning, stacklevel=2)
     rt = activate(plan)
     if not quiet:
+        classes = {k: v for k, v in rt.items() if "." not in k}
         knobs = ", ".join(f"{k}={v.strategy}/x{v.num_chunks}"
-                          for k, v in sorted(rt.items()))
+                          for k, v in sorted(classes.items()))
         print(f"tuned plan {path}: {plan.method}/{plan.mode} on "
               f"{plan.hardware} (workload {plan.workload}, "
-              f"{plan.profile_count} profiles) -> {knobs} "
-              "[applies to chunked-collective call sites]")
+              f"{plan.profile_count} profiles) -> {len(rt)} addressable "
+              f"site entries; class fallbacks: {knobs}")
     return rt
+
+
+# ---------------------------------------------------------------------------
+# plan repository resolution (--plan-repo)
+# ---------------------------------------------------------------------------
+
+def parse_parallel(spec: str) -> ParallelPlan:
+    """``kind[:degree[:microbatches]]`` -> ``ParallelPlan`` — e.g.
+    ``fsdp:8``, ``tp:4``, ``ep:16``, ``pp:4:8``.  The degree lands on the
+    kind's own axis (dp for fsdp)."""
+    parts = spec.split(":")
+    kind = parts[0]
+    deg = int(parts[1]) if len(parts) > 1 else 8
+    mb = int(parts[2]) if len(parts) > 2 else 2
+    axes = {"fsdp": "dp", "tp": "tp", "ep": "ep", "pp": "pp"}
+    if kind not in axes:
+        raise ValueError(f"unknown parallel kind {kind!r} in {spec!r} "
+                         f"(expected one of {sorted(axes)})")
+    return ParallelPlan(kind=kind, microbatches=mb, **{axes[kind]: deg})
+
+
+def resolve_plan_repo(repo_dir: str, cfg, *, parallel: str, hardware: str,
+                      seq: int, global_batch: int, decode: bool = False,
+                      quiet: bool = False) -> Optional[Dict]:
+    """Rebuild the launch workload from (arch config × parallel spec ×
+    shape), look it up in the repository by (structural fingerprint,
+    hardware), and install a hit (returns the runtime plan).  A miss —
+    unknown structure or stale hardware — warns and returns ``None``
+    (launch proceeds untuned)."""
+    wl = extract_workload(cfg, parse_parallel(parallel), seq=seq,
+                          global_batch=global_batch, decode=decode)
+    repo = PlanRepository(repo_dir)
+    try:
+        plan = repo.resolve(wl, hardware)
+    except PlanRepoError as e:
+        # a corrupt/misfiled entry must not brick the launch — treat it
+        # as a miss, loudly
+        warnings.warn(f"plan repository {repo_dir}: {e} — launching "
+                      "untuned", RuntimeWarning, stacklevel=2)
+        return None
+    if plan is None:
+        fp = workload_fingerprint(wl)
+        warnings.warn(
+            f"plan repository {repo_dir}: no plan for "
+            f"(fingerprint {fp[:12]}…, {hardware}) — workload "
+            f"{wl.name!r} launches untuned; run session.tune(..., "
+            f"repo={repo_dir!r}) to populate it", RuntimeWarning,
+            stacklevel=2)
+        return None
+    rt = activate(plan)
+    if not quiet:
+        print(f"plan repository {repo_dir}: resolved "
+              f"({plan.fingerprint[:12]}…, {plan.hardware}) -> "
+              f"{plan.method}/{plan.mode} plan ({plan.profile_count} "
+              f"profiles, zero tuning at launch); {len(rt)} addressable "
+              "site entries installed")
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# per-site audit table (launch/dryrun.py --tuned-plan)
+# ---------------------------------------------------------------------------
+
+def runtime_table(plan: TunedPlan) -> List[Tuple[str, str, int, str]]:
+    """``(site_id, strategy, num_chunks, matched_plan_key)`` for every comm
+    site the plan was tuned over, resolved against the *active* plan —
+    what a launch with these knobs installed will actually hand each
+    site."""
+    from repro.parallel import collectives
+
+    rows = []
+    for s in plan.sites:
+        sid = s.get("site") or s["name"]
+        rt, src = collectives.explain_runtime(sid, s["name"].split(".")[0])
+        rows.append((sid, rt.strategy, rt.num_chunks, src or "<default>"))
+    return rows
+
+
+def print_runtime_table(plan: TunedPlan) -> None:
+    """Operator audit: site id -> knobs -> which plan key supplied them."""
+    rows = runtime_table(plan)
+    wid = max([len(r[0]) for r in rows] + [len("site")])
+    print(f"{'site':<{wid}}  {'strategy':<8} {'chunks':>6}  source")
+    for sid, strat, nc, src in rows:
+        print(f"{sid:<{wid}}  {strat:<8} {nc:>6}  {src}")
+    print(f"({len(rows)} comm sites; 'source' is the plan key that "
+          "resolution matched — exact site, dotted prefix, or class "
+          "fallback)")

@@ -11,7 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.launch.plan import apply_tuned_plan
+from repro.launch.plan import apply_tuned_plan, resolve_plan_repo
 from repro.models import model as M
 from repro.serving.engine import Engine
 
@@ -25,14 +25,27 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--tuned-plan", default=None,
-                    help="saved session.TunedPlan JSON: lowered to collective "
-                         "runtime knobs and installed for this run "
-                         "(consumed by chunked-collective call sites)")
+                    help="saved session.TunedPlan JSON: lowered to per-site "
+                         "collective runtime knobs and installed for this "
+                         "run (every explicit chunked-collective site)")
+    ap.add_argument("--plan-repo", default=None,
+                    help="PlanRepository directory: auto-resolve a stored "
+                         "plan for this launch's (workload fingerprint, "
+                         "hardware); untuned with a warning on a miss")
+    ap.add_argument("--plan-parallel", default="fsdp:8",
+                    help="parallel spec for the repo lookup: "
+                         "kind[:degree[:microbatches]]")
+    ap.add_argument("--plan-hardware", default="tpu-v5e",
+                    help="hardware profile name for the repo lookup key")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.tuned_plan:
         apply_tuned_plan(args.tuned_plan, expect_arch=cfg.name)
+    elif args.plan_repo:
+        resolve_plan_repo(args.plan_repo, cfg, parallel=args.plan_parallel,
+                          hardware=args.plan_hardware, seq=args.max_seq,
+                          global_batch=args.batch, decode=True)
     rng = jax.random.PRNGKey(0)
     params = M.init_params(cfg, rng)
     engine = Engine(cfg, params, batch_size=args.batch, max_seq=args.max_seq)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticCorpus
-from repro.launch.plan import apply_tuned_plan
+from repro.launch.plan import apply_tuned_plan, resolve_plan_repo
 from repro.models import model as M
 from repro.optim import adamw
 from repro.parallel import constraints as CT
@@ -42,9 +42,23 @@ def main(argv=None):
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--tuned-plan", default=None,
-                    help="saved session.TunedPlan JSON: lowered to collective "
-                         "runtime knobs and installed for this run "
-                         "(consumed by chunked-collective call sites)")
+                    help="saved session.TunedPlan JSON: lowered to per-site "
+                         "collective runtime knobs and installed for this "
+                         "run (every explicit chunked-collective site, "
+                         "incl. the plan-aware model builders' per-layer "
+                         "tp.layer*/ep.layer* sites on the --mesh path)")
+    ap.add_argument("--plan-repo", default=None,
+                    help="PlanRepository directory: auto-resolve a stored "
+                         "plan matching this launch's (workload "
+                         "fingerprint, hardware) with zero tuning work; "
+                         "falls back to untuned with a warning on a miss "
+                         "(--tuned-plan, if also given, wins)")
+    ap.add_argument("--plan-parallel", default="fsdp:8",
+                    help="parallel spec the repo lookup fingerprints the "
+                         "workload under: kind[:degree[:microbatches]], "
+                         "e.g. fsdp:8, tp:4, ep:16, pp:4:8")
+    ap.add_argument("--plan-hardware", default="tpu-v5e",
+                    help="hardware profile name for the repo lookup key")
     args = ap.parse_args(argv)
 
     if args.config:
@@ -61,8 +75,16 @@ def main(argv=None):
     else:
         assert args.arch, "--arch or --config required"
         cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    plan_active = False
     if args.tuned_plan:
         apply_tuned_plan(args.tuned_plan, expect_arch=cfg.name)
+        plan_active = True
+    elif args.plan_repo:
+        rt = resolve_plan_repo(args.plan_repo, cfg,
+                               parallel=args.plan_parallel,
+                               hardware=args.plan_hardware,
+                               seq=args.seq, global_batch=args.batch)
+        plan_active = rt is not None
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                     global_batch=args.batch)
     data = iter(SyntheticCorpus(dc))
@@ -76,6 +98,13 @@ def main(argv=None):
         from repro.launch.mesh import make_mesh
         mesh = make_mesh(shape, axes)
         jax.sharding.set_mesh(mesh)
+        if plan_active and "model" in axes:
+            # an installed plan reaches the emitted program through the
+            # plan-aware trunk: per-layer explicit collectives whose sites
+            # resolve against it (falls back inside the model on
+            # indivisible shapes)
+            from dataclasses import replace as dc_replace
+            tcfg = dc_replace(tcfg, sited_mesh=mesh)
         rng = jax.random.PRNGKey(0)
         with CT.use_axes(("data",), "model"):
             params = M.init_params(cfg, rng)

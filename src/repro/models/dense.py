@@ -5,17 +5,30 @@ the transformer block by whisper and zamba2).
 Layers are *stacked* (leading L axis) and executed with ``lax.scan`` so the
 compiled graph contains one layer body regardless of depth — essential to
 keep the 512-device GSPMD dry-run compiles tractable.
+
+Plan-aware (sited) path: passing ``mesh=`` to ``trunk_fwd`` unrolls the
+stack into per-layer bodies whose feed-forward collectives are the
+*explicit* chunked helpers (``ring_ag_matmul`` / ``mm_reduce_scatter`` /
+the MoE all-to-alls), each addressed by a stable SiteId
+(``tp.layer{i}.mlp``, ``ep.layer{j}.moe``).  Each site resolves its own
+knobs against the active tuned plan (``collectives.runtime_for``), so one
+``TunedPlan`` can legitimately drive two layers of the same model to emit
+different chunk structure — the per-operator overlap decision flowing into
+the emitted program, no hand-plumbed ``num_chunks`` anywhere.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.models import layers as L
 from repro.parallel import constraints as CT
+from repro.parallel.collectives import mm_reduce_scatter, ring_ag_matmul
 
 Params = Dict[str, Any]
 
@@ -36,8 +49,43 @@ def init_layer(key, cfg, *, use_moe: bool, ep_pad: int = 1, dtype=jnp.float32) -
     return p
 
 
+def tp_mlp(p: Params, x: jnp.ndarray, kind: str, mesh, *, axis: str = "model",
+           site: str = "tp.mlp") -> jnp.ndarray:
+    """Explicit tensor-parallel MLP: the up projections are ring
+    AllGather∘matmul over a sequence-sharded input (site ``{site}.ag``),
+    the down projection matmul∘ReduceScatter (site ``{site}.rs``) — each
+    site's chunk structure resolved independently against the active tuned
+    plan.  Numerically identical to ``layers.mlp``."""
+    ag = partial(ring_ag_matmul, mesh=mesh, axis=axis,
+                 x_spec=P(None, axis, None), w_spec=P(None, axis),
+                 out_spec=P(None, None, axis), site=f"{site}.ag")
+    if kind == "swiglu":
+        h = jax.nn.silu(ag(x, p["gate"]["w"])) * ag(x, p["up"]["w"])
+    else:
+        h = ag(x, p["up"]["w"])
+        if "b" in p["up"]:
+            h = h + p["up"]["b"]
+        h = jax.nn.gelu(h)
+    y = mm_reduce_scatter(h, p["down"]["w"], mesh, axis=axis,
+                          x_spec=P(None, None, axis), w_spec=P(axis, None),
+                          out_spec=P(None, axis, None), site=f"{site}.rs")
+    if "b" in p["down"]:
+        y = y + p["down"]["b"]
+    return y
+
+
 def layer_fwd(p: Params, cfg, x: jnp.ndarray, positions, cache: Optional[Params],
-              *, use_moe: bool) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+              *, use_moe: bool, mesh=None, axis: str = "model",
+              site: str = "") -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """One decoder layer.  ``mesh`` switches the feed-forward onto the
+    explicit plan-aware collectives, with ``site`` the layer's SiteId
+    prefix (``tp.layer{i}.mlp`` / ``ep.layer{j}.moe``)."""
+    def ff(q, v):
+        if mesh is not None and not use_moe:
+            return tp_mlp(q, v, cfg.mlp_kind, mesh, axis=axis,
+                          site=site or "tp.mlp")
+        return L.mlp(q, v, cfg.mlp_kind)
+
     x = CT.btd(x)
     h = L.norm(p["ln1"], x, cfg.norm_kind)
     if cfg.attn_kind == "mla":
@@ -47,15 +95,16 @@ def layer_fwd(p: Params, cfg, x: jnp.ndarray, positions, cache: Optional[Params]
 
     aux = jnp.zeros((), jnp.float32)
     if cfg.parallel_block:           # phi-2 style: mlp reads the same norm
-        x = x + attn_out + L.mlp(p["mlp"], h, cfg.mlp_kind)
+        x = x + attn_out + ff(p["mlp"], h)
     else:
         x = x + attn_out
         h2 = L.norm(p["ln2"], x, cfg.norm_kind)
         if use_moe:
-            ff, aux = L.moe_block(p["moe"], cfg, h2)
+            ff_out, aux = L.moe_block(p["moe"], cfg, h2, mesh=mesh, axis=axis,
+                                      site=site or "ep.moe")
         else:
-            ff = L.mlp(p["mlp"], h2, cfg.mlp_kind)
-        x = x + ff
+            ff_out = ff(p["mlp"], h2)
+        x = x + ff_out
     return x, new_cache, aux
 
 
@@ -109,8 +158,65 @@ def _run_segment(stacked: Params, cfg, x, positions, caches, *, use_moe: bool,
     return x, new_caches, aux
 
 
-def trunk_fwd(p: Params, cfg, x, positions, caches=None, *, remat: bool = False):
-    """caches: None | {"dense_layers": stacked_cache, "moe_layers": stacked_cache}."""
+def _sited_applicable(cfg, x, mesh, axis: str) -> Tuple[bool, str]:
+    """Shape preconditions of the explicit collective helpers (shard_map
+    needs exact divisibility; violations fall back to the scan path)."""
+    if axis not in mesh.axis_names:
+        return False, f"mesh has no {axis!r} axis"
+    n = dict(mesh.shape)[axis]
+    if x.shape[1] % n:
+        return False, f"sequence length {x.shape[1]} not divisible by {n}"
+    if cfg.d_ff and cfg.d_ff % n:
+        return False, f"d_ff {cfg.d_ff} not divisible by {n}"
+    return True, ""
+
+
+def _trunk_fwd_sited(p: Params, cfg, x, positions, mesh, *, axis: str,
+                     remat: bool):
+    """Python-unrolled trunk: one body per layer so every layer's comm
+    sites resolve independently against the active plan.  Train/prefill
+    only (no caches); compile cost grows with depth, so this path is for
+    tuned deployments, not the 512-device dry-run compiles."""
+    aux_total = jnp.zeros((), jnp.float32)
+    li = 0
+    for seg, use_moe in (("dense_layers", False), ("moe_layers", True)):
+        if seg not in p:
+            continue
+        stacked = p[seg]
+        n_seg = jax.tree.leaves(stacked)[0].shape[0]
+        for j in range(n_seg):
+            lp = jax.tree.map(lambda a: a[j], stacked)
+            site = f"ep.layer{j}.moe" if use_moe else f"tp.layer{li}.mlp"
+
+            def fl(q, v):
+                return layer_fwd(q, cfg, v, positions, None, use_moe=use_moe,
+                                 mesh=mesh, axis=axis, site=site)
+
+            if remat:
+                fl = jax.checkpoint(fl)
+            x, _, a = fl(lp, x)
+            aux_total = aux_total + a
+            li += 1
+    return x, None, aux_total
+
+
+def trunk_fwd(p: Params, cfg, x, positions, caches=None, *, remat: bool = False,
+              mesh=None, tp_axis: str = "model"):
+    """caches: None | {"dense_layers": stacked_cache, "moe_layers": stacked_cache}.
+
+    ``mesh``: opt into the plan-aware sited path (explicit per-layer
+    collectives addressed as ``tp.layer{i}.mlp`` / ``ep.layer{j}.moe``;
+    see module docstring).  Ignored for decode (``caches`` given); shapes
+    that violate the explicit helpers' divisibility fall back to the scan
+    path with a ``RuntimeWarning``."""
+    if mesh is not None and caches is None:
+        ok, why = _sited_applicable(cfg, x, mesh, tp_axis)
+        if not ok:
+            warnings.warn(f"plan-aware trunk disabled: {why}; using the "
+                          "GSPMD scan path", RuntimeWarning, stacklevel=2)
+        else:
+            return _trunk_fwd_sited(p, cfg, x, positions, mesh, axis=tp_axis,
+                                    remat=remat)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
     for seg, use_moe in (("dense_layers", False), ("moe_layers", True)):

@@ -9,12 +9,14 @@ MLPs, and capacity-based mixture-of-experts with shared experts.
 from __future__ import annotations
 
 import math
+import warnings
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import PartitionSpec as P
 
 from repro.parallel import constraints as CT
 
@@ -515,7 +517,40 @@ def init_moe(key, cfg, *, ep_pad: int = 1, dtype=jnp.float32) -> Params:
     return p
 
 
-def moe_block(p: Params, cfg, x: jnp.ndarray, *, capacity_factor: float | None = None
+def _moe_ffn_explicit(p: Params, buf: jnp.ndarray, mesh, *, axis: str,
+                      site: str) -> jnp.ndarray:
+    """Expert FFN with the dispatch/combine all-to-alls made explicit: one
+    shard_map over the expert axis — chunked a2a in (``{site}.a2a_disp``),
+    per-device expert einsums on the local expert shard, chunked a2a out
+    (``{site}.a2a_comb``).  Chunk counts resolve per-site against the
+    active tuned plan, so two MoE layers can emit different a2a structure
+    from one plan (the paper's per-site co-tuning made HLO-visible)."""
+    from repro.parallel.collectives import (_chunked_a2a_local, runtime_for,
+                                            shard_map)
+
+    nc_disp = runtime_for(f"{site}.a2a_disp", "a2a").num_chunks
+    nc_comb = runtime_for(f"{site}.a2a_comb", "a2a").num_chunks
+
+    def local(b, gate, up, down):
+        # (E, cap/n, D) token-sharded -> (E/n, cap, D) expert-sharded
+        b = _chunked_a2a_local(b, axis=axis, split_axis=0, concat_axis=1,
+                               num_chunks=nc_disp, site=f"{site}.a2a_disp")
+        h = jnp.einsum("ecd,edf->ecf", b, gate)
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", b, up)
+        y = jnp.einsum("ecf,efd->ecd", h, down)
+        # back to the token-sharded capacity layout for the combine gather
+        return _chunked_a2a_local(y, axis=axis, split_axis=1, concat_axis=0,
+                                  num_chunks=nc_comb, site=f"{site}.a2a_comb")
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(None, axis, None), P(axis, None, None),
+                             P(axis, None, None), P(axis, None, None)),
+                   out_specs=P(None, axis, None))
+    return fn(buf, p["gate"], p["up"], p["down"])
+
+
+def moe_block(p: Params, cfg, x: jnp.ndarray, *, capacity_factor: float | None = None,
+              mesh=None, axis: str = "model", site: str = "moe",
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k routed experts with capacity-bounded scatter dispatch + optional
     shared experts.  Returns (out, aux_loss).
@@ -524,6 +559,12 @@ def moe_block(p: Params, cfg, x: jnp.ndarray, *, capacity_factor: float | None =
     (E, cap, D) by position-within-expert (cumsum over the flat token axis);
     overflow tokens are dropped (their combine weight is zero).  Under EP
     sharding the (T,D)->(E,cap,D) scatter lowers to all-to-all.
+
+    With ``mesh`` given, the expert FFN runs the *explicit* expert-parallel
+    path instead of leaving the layout change to GSPMD: the dispatch and
+    combine are real chunked all-to-alls whose chunk counts resolve against
+    the active tuned plan at ``{site}.a2a_disp`` / ``{site}.a2a_comb``
+    (numerically identical to the GSPMD path).
     """
     B, S, D = x.shape
     T = B * S
@@ -560,11 +601,23 @@ def moe_block(p: Params, cfg, x: jnp.ndarray, *, capacity_factor: float | None =
     row = jnp.clip(flat_e * cap + pos, 0, E * cap - 1)          # (T*k,)
     vals = jnp.repeat(xt, k, axis=0) * keep[:, None].astype(x.dtype)
     buf = jnp.zeros((E * cap, D), x.dtype).at[row].add(vals).reshape(E, cap, D)
-    buf = CT.ecd(buf)          # expert-parallel layout: this IS the all-to-all
 
-    h = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
-    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["up"])
-    y = CT.ecd(jnp.einsum("ecf,efd->ecd", h, p["down"]))        # (E,cap,D)
+    if mesh is not None:
+        n = dict(mesh.shape).get(axis, 1)
+        if E % n or cap % n:
+            warnings.warn(
+                f"collective site {site!r}: expert buffer (E={E}, cap={cap}) "
+                f"is not divisible by the {axis!r} axis ({n}); using the "
+                "GSPMD expert layout instead of explicit all-to-alls",
+                RuntimeWarning, stacklevel=2)
+            mesh = None
+    if mesh is not None:
+        y = _moe_ffn_explicit(p, buf, mesh, axis=axis, site=site)
+    else:
+        buf = CT.ecd(buf)      # expert-parallel layout: this IS the all-to-all
+        h = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["up"])
+        y = CT.ecd(jnp.einsum("ecf,efd->ecd", h, p["down"]))    # (E,cap,D)
 
     gathered = jnp.take(y.reshape(E * cap, D), row, axis=0)     # (T*k,D)
     w = (top_p.reshape(-1) * keep).astype(x.dtype)

@@ -100,10 +100,13 @@ def _embed_inputs(cfg, p, batch) -> jnp.ndarray:
 
 
 def forward_hidden(cfg, p: Params, batch, caches: Optional[Params] = None, *,
-                   remat: bool = False, backend: Optional[str] = None
+                   remat: bool = False, backend: Optional[str] = None,
+                   mesh=None
                    ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
     """Runs the trunk over batch["tokens"].  If ``caches`` is given, this is a
-    cached prefill (states/KV are filled; pass fresh caches)."""
+    cached prefill (states/KV are filled; pass fresh caches).  ``mesh``
+    opts dense-family trunks into the plan-aware explicit-collective path
+    (``dense.trunk_fwd``); other families ignore it."""
     B, S = batch["tokens"].shape
     t0 = caches["pos"] if caches is not None else jnp.zeros((), jnp.int32)
     positions = _positions(cfg, batch, B, S, t0)
@@ -128,6 +131,8 @@ def forward_hidden(cfg, p: Params, batch, caches: Optional[Params] = None, *,
         elif cfg.family == "hybrid":
             x, new_tc, aux = zamba2.trunk_fwd(p["trunk"], cfg, x, positions, tc, **kw)
         else:
+            if mesh is not None:
+                kw["mesh"] = mesh
             x, new_tc, aux = dense.trunk_fwd(p["trunk"], cfg, x, positions, tc, **kw)
         new_caches = None if caches is None else {"trunk": new_tc, "pos": t0 + S}
 
@@ -172,8 +177,9 @@ def chunked_ce(cfg, p, x, targets, mask, *, chunk: int = 256):
 
 
 def loss_and_metrics(cfg, p: Params, batch, *, remat: bool = True,
-                     backend: Optional[str] = None):
-    x, _, aux = forward_hidden(cfg, p, batch, remat=remat, backend=backend)
+                     backend: Optional[str] = None, mesh=None):
+    x, _, aux = forward_hidden(cfg, p, batch, remat=remat, backend=backend,
+                               mesh=mesh)
     mask = batch.get("mask")
     if mask is None:
         mask = jnp.ones(batch["targets"].shape, jnp.float32)

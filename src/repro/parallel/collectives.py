@@ -17,11 +17,37 @@ Every function has a dense reference (``*_ref``) used by the tests, and the
 explicit variants are HLO-visible: the dry-run roofline counts their
 collective-permute / reduce-scatter bytes, so tuned chunk counts actually
 move the measured collective term.
+
+Per-site plan addressing
+------------------------
+
+Every tunable collective call site carries a stable dotted **SiteId**
+(e.g. ``fsdp.layer3.ag_params``, ``tp.layer1.mlp.rs``) derived from the
+Workload IR names that ``core.extract`` emits.  A runtime plan is a
+``{site_id: CollectiveRuntime}`` map (what ``session.TunedPlan.
+runtime_plan()`` lowers to); ``runtime_for(site, cls)`` resolves a site
+against the *active* plan by walking from most- to least-specific:
+
+  exact site id -> each dotted prefix (``tp.layer1.mlp`` -> ``tp.layer1``
+  -> ``tp``) -> the site *class* (``"ag"`` / ``"rs"`` / ``"ar"`` /
+  ``"a2a"`` / ``"p2p"``) -> XLA defaults.
+
+so one plan can legitimately drive two layers of the same model to emit
+different chunk structure.  Plans are scoped: ``use_runtime_plan`` pushes
+a plan for a ``with`` block (what ``TunedPlan.applied()`` uses — nested
+scopes shadow, exits restore, exception-safe), while
+``install_runtime_plan`` sets the process-wide base plan (the launchers'
+``--tuned-plan`` / ``--plan-repo`` startup path).  The legacy
+``set_runtime_plan`` remains as a deprecation shim over the latter.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
+import warnings
 from dataclasses import dataclass
 from functools import partial
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,37 +75,111 @@ class CollectiveRuntime:
     num_chunks: int = 1
 
 
-# Process-wide active runtime plan: per-site-class knobs (what a saved
-# ``session.TunedPlan`` lowers to).  Launchers install it via
-# ``core.apply.activate`` (the ``--tuned-plan`` flag); the chunked
-# collectives below consume it whenever a call site leaves ``num_chunks``
-# unset (``None``), so an installed plan changes the emitted collective
-# structure without hand-plumbed chunk counts.
-_ACTIVE_PLAN: dict = {}
+# Active runtime plans, each ``{site_id: CollectiveRuntime}``.  The base
+# plan is process-wide (``install_runtime_plan`` — the launchers'
+# ``--tuned-plan`` startup path); ``use_runtime_plan`` layers scoped plans
+# over it (``TunedPlan.applied()``) in a ``ContextVar`` so concurrent
+# threads/tasks cannot pop each other's scopes.  The *innermost* plan is
+# the active one — scopes shadow rather than merge, so ``applied()`` means
+# "exactly this plan", and exiting restores whatever was active before.
+_BASE_PLAN: Dict[str, CollectiveRuntime] = {}
+_SCOPED_PLANS: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_runtime_plans", default=())
 
 _DEFAULT_RUNTIME = CollectiveRuntime()
 
 
-def set_runtime_plan(plan: dict) -> None:
-    """Install ``{site_class: CollectiveRuntime}`` as the active plan
-    (replacing any previous one; empty dict clears it)."""
-    global _ACTIVE_PLAN
-    _ACTIVE_PLAN = dict(plan)
+def install_runtime_plan(plan: Optional[Dict[str, CollectiveRuntime]] = None,
+                         ) -> None:
+    """Install ``{site_id: CollectiveRuntime}`` as the process-wide base
+    plan (replacing any previous one; ``None``/empty clears it).  Scoped
+    plans pushed by ``use_runtime_plan`` shadow it while active."""
+    global _BASE_PLAN
+    _BASE_PLAN = dict(plan or {})
 
 
-def active_runtime_plan() -> dict:
-    return dict(_ACTIVE_PLAN)
+@contextlib.contextmanager
+def use_runtime_plan(plan: Dict[str, CollectiveRuntime]):
+    """Scope a runtime plan to a ``with`` block: inside, ``runtime_for``
+    resolves against ``plan`` (shadowing any outer/base plan); on exit —
+    normal or exceptional — the prior state is restored.  Nests, and is
+    thread/async-safe (context-local, token-based restore)."""
+    token = _SCOPED_PLANS.set(_SCOPED_PLANS.get() + (dict(plan),))
+    try:
+        yield
+    finally:
+        _SCOPED_PLANS.reset(token)
 
 
-def runtime_for(site: str) -> CollectiveRuntime:
-    """The active knobs for a collective site class (``"ag"``, ``"rs"``,
-    ``"ar"``, ``"a2a"``, ``"p2p"``); XLA defaults when no plan is active."""
-    return _ACTIVE_PLAN.get(site, _DEFAULT_RUNTIME)
+def set_runtime_plan(plan: Dict[str, CollectiveRuntime]) -> None:
+    """Deprecated alias for ``install_runtime_plan`` (the pre-per-site
+    process-global API).  Resolved knobs are bit-identical; prefer
+    ``TunedPlan.applied()`` for scoped use."""
+    warnings.warn(
+        "set_runtime_plan is deprecated; use install_runtime_plan(plan) for "
+        "a process-wide install or `with plan.applied(): ...` for a scoped "
+        "one", DeprecationWarning, stacklevel=2)
+    install_runtime_plan(plan)
 
 
-def _resolve_chunks(num_chunks, site: str) -> int:
+def _active_plan() -> Dict[str, CollectiveRuntime]:
+    scopes = _SCOPED_PLANS.get()
+    return scopes[-1] if scopes else _BASE_PLAN
+
+
+def active_runtime_plan() -> Dict[str, CollectiveRuntime]:
+    """The innermost active plan (a copy)."""
+    return dict(_active_plan())
+
+
+def site_class(site: str) -> str:
+    """First dotted component of a site id — the coarse bucket the legacy
+    three-knob plans keyed on (``"ag"``/``"rs"``/``"ar"``/``"a2a"``/
+    ``"p2p"`` for Workload IR comm names)."""
+    return site.split(".", 1)[0]
+
+
+def explain_runtime(site: str, cls: Optional[str] = None,
+                    ) -> Tuple[CollectiveRuntime, str]:
+    """Resolve ``site`` against the active plan; returns ``(knobs,
+    matched_key)`` where ``matched_key`` is the plan key that supplied the
+    knobs (``""`` = XLA defaults).  Resolution order: exact site id, then
+    each dotted prefix (most to least specific), then ``cls`` (the
+    collective's site class, e.g. ``"ag"``)."""
+    plan = _active_plan()
+    if site:
+        parts = site.split(".")
+        for k in range(len(parts), 0, -1):
+            key = ".".join(parts[:k])
+            if key in plan:
+                return plan[key], key
+    if cls is not None and cls in plan:
+        return plan[cls], cls
+    return _DEFAULT_RUNTIME, ""
+
+
+def runtime_for(site: str, cls: Optional[str] = None) -> CollectiveRuntime:
+    """The active knobs for a collective site.  ``site`` may be a full
+    SiteId (``"fsdp.layer3.ag_params"``) or a bare site class (``"ag"``,
+    ``"rs"``, ``"ar"``, ``"a2a"``, ``"p2p"``); ``cls`` is the fallback
+    class a specific site degrades to when the plan has no entry at any
+    of its prefixes.  XLA defaults when nothing matches."""
+    return explain_runtime(site, cls)[0]
+
+
+def _resolve_chunks(num_chunks, site: str, cls: Optional[str] = None) -> int:
     """Explicit ``num_chunks`` wins; ``None`` defers to the active plan."""
-    return runtime_for(site).num_chunks if num_chunks is None else num_chunks
+    return runtime_for(site, cls).num_chunks if num_chunks is None else num_chunks
+
+
+def _warn_unchunked(site: str, num_chunks: int, detail: str) -> None:
+    """A tuned chunk count that does not divide the shard shape silently
+    degrading to the monolithic collective is an audit hazard — name the
+    site once at trace time instead."""
+    warnings.warn(
+        f"collective site {site!r}: num_chunks={num_chunks} does not divide "
+        f"{detail}; emitting the unchunked collective for this site",
+        RuntimeWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -92,7 +192,7 @@ def ag_matmul_ref(x, w):
     return x @ w
 
 
-def _ring_ag_matmul_local(x, w, *, axis: str, num_chunks: int):
+def _ring_ag_matmul_local(x, w, *, axis: str, num_chunks: int, site: str = "ag"):
     """Per-device body: hold one sequence shard, rotate shards around the
     ring; each step multiplies the currently-held shard so communication of
     the next shard overlaps with this step's matmul."""
@@ -102,8 +202,12 @@ def _ring_ag_matmul_local(x, w, *, axis: str, num_chunks: int):
     out_shape = x.shape[:-2] + (n * Tl, w.shape[-1])
     perm = [(j, (j - 1) % n) for j in range(n)]
 
+    chunked = num_chunks > 1 and Tl % num_chunks == 0
+    if num_chunks > 1 and not chunked:
+        _warn_unchunked(site, num_chunks, f"the local sequence shard ({Tl})")
+
     def chunked_mm(xs):
-        if num_chunks <= 1 or Tl % num_chunks:
+        if not chunked:
             return xs @ w
         blocks = jnp.stack(jnp.split(xs, num_chunks, axis=-2))
         ys = lax.map(lambda b: b @ w, blocks)
@@ -129,9 +233,11 @@ def _ring_ag_matmul_local(x, w, *, axis: str, num_chunks: int):
 
 def ring_ag_matmul(x, w, mesh: Mesh, *, axis: str = "model",
                    x_spec: P, w_spec: P, out_spec: P,
-                   num_chunks: int | None = None):
-    num_chunks = _resolve_chunks(num_chunks, "ag")
-    fn = shard_map(partial(_ring_ag_matmul_local, axis=axis, num_chunks=num_chunks),
+                   num_chunks: int | None = None, site: str | None = None):
+    site = site or "ag"
+    num_chunks = _resolve_chunks(num_chunks, site, "ag")
+    fn = shard_map(partial(_ring_ag_matmul_local, axis=axis,
+                           num_chunks=num_chunks, site=site),
                    mesh=mesh, in_specs=(x_spec, w_spec), out_specs=out_spec)
     return fn(x, w)
 
@@ -146,10 +252,13 @@ def mm_rs_ref(x, w):
     return x @ w
 
 
-def _mm_rs_local(x, w, *, axis: str, num_chunks: int):
+def _mm_rs_local(x, w, *, axis: str, num_chunks: int, site: str = "rs"):
     n = axis_size(axis)
     T = x.shape[-2]
     if num_chunks <= 1 or T % (num_chunks * n):
+        if num_chunks > 1:
+            _warn_unchunked(site, num_chunks,
+                            f"the scatter tiling ({T} rows over {n} shards)")
         y = x @ w
         return lax.psum_scatter(y, axis, scatter_dimension=y.ndim - 2, tiled=True)
     # tile-aligned chunking: chunk i must contain rows {j·T/n + i·s ... } for
@@ -171,9 +280,11 @@ def _mm_rs_local(x, w, *, axis: str, num_chunks: int):
 
 def mm_reduce_scatter(x, w, mesh: Mesh, *, axis: str = "model",
                       x_spec: P, w_spec: P, out_spec: P,
-                      num_chunks: int | None = None):
-    num_chunks = _resolve_chunks(num_chunks, "rs")
-    fn = shard_map(partial(_mm_rs_local, axis=axis, num_chunks=num_chunks),
+                      num_chunks: int | None = None, site: str | None = None):
+    site = site or "rs"
+    num_chunks = _resolve_chunks(num_chunks, site, "rs")
+    fn = shard_map(partial(_mm_rs_local, axis=axis, num_chunks=num_chunks,
+                           site=site),
                    mesh=mesh, in_specs=(x_spec, w_spec), out_specs=out_spec)
     return fn(x, w)
 
@@ -183,22 +294,35 @@ def mm_reduce_scatter(x, w, mesh: Mesh, *, axis: str = "model",
 #   x: (..., E, capl, D) with E sharded over `axis` on entry or exit
 # ---------------------------------------------------------------------------
 
+def _chunked_a2a_local(xl, *, axis: str, split_axis: int, concat_axis: int,
+                       num_chunks: int, site: str = "a2a"):
+    """Local body: one all_to_all, or ``num_chunks`` sequential a2a's over
+    the trailing feature dim (reused by ``chunked_all_to_all`` and the
+    explicit expert-parallel MoE FFN)."""
+    if num_chunks <= 1 or xl.shape[-1] % num_chunks:
+        if num_chunks > 1:
+            _warn_unchunked(site, num_chunks,
+                            f"the trailing feature dim ({xl.shape[-1]})")
+        return lax.all_to_all(xl, axis, split_axis, concat_axis, tiled=True)
+    blocks = jnp.stack(jnp.split(xl, num_chunks, axis=-1))
+    ys = lax.map(lambda b: lax.all_to_all(b, axis, split_axis, concat_axis,
+                                          tiled=True), blocks)
+    return jnp.concatenate(list(ys), axis=-1)
+
+
 def chunked_all_to_all(x, mesh: Mesh, *, axis: str = "model",
                        split_axis: int, concat_axis: int,
-                       x_spec: P, out_spec: P, num_chunks: int | None = None):
+                       x_spec: P, out_spec: P, num_chunks: int | None = None,
+                       site: str | None = None):
     """lax.all_to_all decomposed into ``num_chunks`` sequential a2a's over
     the trailing feature dim, so expert FFN compute on early chunks overlaps
     the transfer of later ones (the EP dual-batch pattern).  ``num_chunks=
-    None`` (default) defers to the active tuned plan's ``a2a`` knobs."""
-    num_chunks = _resolve_chunks(num_chunks, "a2a")
-    def local(xl):
-        if num_chunks <= 1 or xl.shape[-1] % num_chunks:
-            return lax.all_to_all(xl, axis, split_axis, concat_axis, tiled=True)
-        blocks = jnp.stack(jnp.split(xl, num_chunks, axis=-1))
-        ys = lax.map(lambda b: lax.all_to_all(b, axis, split_axis, concat_axis,
-                                              tiled=True), blocks)
-        return jnp.concatenate(list(ys), axis=-1)
-
+    None`` (default) defers to the active tuned plan's knobs for ``site``
+    (falling back to the ``a2a`` site class)."""
+    site = site or "a2a"
+    num_chunks = _resolve_chunks(num_chunks, site, "a2a")
+    local = partial(_chunked_a2a_local, axis=axis, split_axis=split_axis,
+                    concat_axis=concat_axis, num_chunks=num_chunks, site=site)
     fn = shard_map(local, mesh=mesh, in_specs=(x_spec,), out_specs=out_spec)
     return fn(x)
 

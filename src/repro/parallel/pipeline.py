@@ -10,17 +10,33 @@ tick's stage compute.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.parallel.collectives import axis_size, shard_map
+from repro.parallel.collectives import (_warn_unchunked, axis_size,
+                                        runtime_for, shard_map)
 
 
-def _pipeline_local(params, x_mb, *, fn: Callable, axis: str, microbatches: int):
+def _chunked_ppermute(x, axis: str, perm, *, num_chunks: int, site: str):
+    """Inter-stage activation transfer, optionally decomposed into
+    ``num_chunks`` feature-dim ppermutes (tuned ``p2p`` knobs) so the next
+    tick's compute can start on early chunks."""
+    if num_chunks <= 1 or x.shape[-1] % num_chunks:
+        if num_chunks > 1:
+            _warn_unchunked(site, num_chunks,
+                            f"the trailing activation dim ({x.shape[-1]})")
+        return lax.ppermute(x, axis, perm)
+    blocks = jnp.stack(jnp.split(x, num_chunks, axis=-1))
+    ys = lax.map(lambda b: lax.ppermute(b, axis, perm), blocks)
+    return jnp.concatenate(list(ys), axis=-1)
+
+
+def _pipeline_local(params, x_mb, *, fn: Callable, axis: str, microbatches: int,
+                    num_chunks: int = 1, site: str = "p2p"):
     """Per-device body.  params: this stage's params (leading stage dim of 1
     squeezed by shard_map).  x_mb: (M, mb, ...) microbatched input
     (replicated).  Returns (M, mb, ...) outputs (only the last stage's
@@ -46,7 +62,8 @@ def _pipeline_local(params, x_mb, *, fn: Callable, axis: str, microbatches: int)
             ys,
             jnp.where(valid, out, ys[emit_idx])[None],
             emit_idx, axis=0)
-        buf = lax.ppermute(out, axis, fwd)
+        buf = _chunked_ppermute(out, axis, fwd, num_chunks=num_chunks,
+                                site=site)
         return (buf, ys)
 
     mb_shape = x_mb.shape[1:]
@@ -65,13 +82,16 @@ def _pipeline_local(params, x_mb, *, fn: Callable, axis: str, microbatches: int)
 
 
 def pipeline_apply(fn: Callable, stage_params, x, *, mesh: Mesh,
-                   axis: str = "stage", microbatches: int):
+                   axis: str = "stage", microbatches: int,
+                   site: Optional[str] = None):
     """Run ``fn(stage_params_i, x)`` through an S-stage pipeline.
 
     stage_params: pytree with a leading stage dim (sharded over ``axis``).
     x: (M·mb, ...) global batch; reshaped to M microbatches.
     Returns (M·mb, ...) outputs, equivalent to applying the stages
-    sequentially.
+    sequentially.  ``site`` addresses the inter-stage transfers in the
+    active tuned plan (default the ``p2p`` site class): tuned chunk counts
+    decompose each tick's ppermute into partial feature-dim transfers.
     """
     M = microbatches
     B = x.shape[0]
@@ -79,7 +99,10 @@ def pipeline_apply(fn: Callable, stage_params, x, *, mesh: Mesh,
     x_mb = x.reshape((M, B // M) + x.shape[1:])
     p_specs = jax.tree.map(lambda a: P(axis, *([None] * (a.ndim - 1))),
                            stage_params)
-    local = partial(_pipeline_local, fn=fn, axis=axis, microbatches=M)
+    site = site or "p2p"
+    rt = runtime_for(site, "p2p")
+    local = partial(_pipeline_local, fn=fn, axis=axis, microbatches=M,
+                    num_chunks=rt.num_chunks, site=site)
     out = shard_map(local, mesh=mesh,
                     in_specs=(p_specs, P()), out_specs=P())(stage_params, x_mb)
     return out.reshape((B,) + out.shape[2:])

@@ -29,6 +29,9 @@ class TrainConfig:
     microbatches: int = 1      # >1: dual-batch interleave (EP/TP overlap)
     grad_accum: int = 1        # sequential microbatches (memory ceiling)
     backend: Optional[str] = None   # kernel backend override
+    sited_mesh: Optional[Any] = None   # plan-aware explicit collectives:
+                                       # per-layer sites resolve against the
+                                       # active TunedPlan (dense families)
 
 
 def make_train_step(cfg, tcfg: TrainConfig):
@@ -39,7 +42,8 @@ def make_train_step(cfg, tcfg: TrainConfig):
     def loss_fn(params, batch):
         loss, metrics = M.loss_and_metrics(cfg, params, batch,
                                            remat=tcfg.remat,
-                                           backend=tcfg.backend)
+                                           backend=tcfg.backend,
+                                           mesh=tcfg.sited_mesh)
         return loss, metrics
 
     def train_step(params, opt_state, batch, step):

@@ -53,3 +53,55 @@ def test_tuned_chunks_visible_in_hlo():
     out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
                          capture_output=True, text=True, timeout=560)
     assert "SUBPROCESS_OK" in out.stdout, out.stdout + out.stderr
+
+
+_SITED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.parallel import collectives as C
+
+mesh = make_mesh((8,), ("model",))
+cfg = get_smoke_config("llama3-8b")          # 2 layers
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+batch = {"tokens": jnp.arange(2 * 32).reshape(2, 32) % cfg.vocab_size}
+
+def hlo(plan):
+    with C.use_runtime_plan(plan):
+        f = jax.jit(lambda p: M.forward_hidden(cfg, p, batch, mesh=mesh)[0])
+        return f.lower(params).compile().as_text()
+
+rt = C.CollectiveRuntime
+uniform1 = hlo({"tp": rt("chunked", 1)})
+uniform2 = hlo({"tp": rt("chunked", 2)})
+divergent = hlo({"tp.layer0.mlp": rt("chunked", 2),
+                 "tp.layer1.mlp": rt("chunked", 4)})
+# a plan with divergent per-site configs produces observably different
+# compiled structure from either uniform plan of the same 2-layer model
+assert divergent != uniform1 and divergent != uniform2
+assert uniform1 != uniform2
+# and the emitted values are the plan-independent model function
+ref = M.forward_hidden(cfg, params, batch)[0]
+with C.use_runtime_plan({"tp.layer0.mlp": rt("chunked", 2),
+                         "tp.layer1.mlp": rt("chunked", 4)}):
+    out = M.forward_hidden(cfg, params, batch, mesh=mesh)[0]
+assert float(jnp.abs(ref - out).max()) < 1e-3
+print("SUBPROCESS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_divergent_per_site_plan_changes_two_layers_hlo():
+    """Tentpole acceptance at the HLO level: on a real 8-device mesh, one
+    plan whose per-site configs diverge compiles a 2-layer model to
+    different collective structure than any uniform plan — per-layer sites
+    flow into the emitted program."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SITED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "SUBPROCESS_OK" in out.stdout, out.stdout + out.stderr

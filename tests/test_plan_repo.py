@@ -1,0 +1,174 @@
+"""PlanRepository: (fingerprint × hardware) round-trips, miss semantics
+(unknown structure / stale hardware), tamper refusal, ``tune(repo=...)``
+auto-put, and the launchers' ``--plan-repo`` startup path end-to-end (a
+repository hit installs the stored plan with zero tuning work)."""
+import json
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    ParallelPlan,
+    PlanRepoError,
+    PlanRepository,
+    extract_workload,
+    tune,
+    workload_fingerprint,
+)
+from repro.core.plan_repo import as_repository
+from repro.parallel import collectives as C
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan_state():
+    yield
+    C.install_runtime_plan({})
+
+
+def _wl(seq=64, batch=4):
+    cfg = get_smoke_config("llama3-8b")
+    plan = ParallelPlan(kind="fsdp", dp=8)
+    return extract_workload(cfg, plan, seq=seq, global_batch=batch)
+
+
+def test_repo_round_trip(tmp_path):
+    repo = PlanRepository(tmp_path / "repo")
+    wl = _wl()
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    path = repo.put(plan)
+    assert (plan.fingerprint, "tpu-v5e") in repo and len(repo) == 1
+    assert repo.entries()[0][:2] == (plan.fingerprint, "tpu-v5e")
+    back = repo.get(plan.fingerprint, "tpu-v5e")
+    assert back == plan  # full-artifact equality
+    assert repo.resolve(wl, "tpu-v5e") == plan
+    assert path.endswith(f"{plan.fingerprint}__tpu-v5e.json")
+    with pytest.raises(FileExistsError, match="overwrite"):
+        repo.put(plan, overwrite=False)
+    repo.put(plan)  # overwrite=True default
+
+
+def test_repo_misses(tmp_path):
+    repo = PlanRepository(tmp_path)
+    wl = _wl()
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    repo.put(plan)
+    # stale-hardware miss: same structure, different hardware key
+    assert repo.resolve(wl, "a40-nvlink") is None
+    assert repo.get(plan.fingerprint, "a40-nvlink") is None
+    # unknown-structure miss
+    other = _wl(seq=32, batch=2)
+    assert workload_fingerprint(other) != plan.fingerprint
+    assert repo.resolve(other, "tpu-v5e") is None
+
+
+def test_repo_refuses_misfiled_or_tampered_entries(tmp_path):
+    repo = PlanRepository(tmp_path)
+    wl = _wl()
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    path = repo.put(plan)
+    # tamper: rewrite the stored fingerprint but keep the filename key
+    with open(path) as f:
+        doc = json.load(f)
+    doc["fingerprint"] = "0" * 64
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(PlanRepoError, match="misfiled/tampered"):
+        repo.get(plan.fingerprint, "tpu-v5e")
+    with pytest.raises(PlanRepoError):
+        repo.resolve(wl, "tpu-v5e")
+    # truncated entry (interrupted writer of a pre-atomic-put era): the
+    # repository refuses it rather than crashing with a decode error
+    with open(path, "w") as f:
+        f.write('{"method": "lagom", "mo')
+    with pytest.raises(PlanRepoError, match="truncated or corrupt"):
+        repo.get(plan.fingerprint, "tpu-v5e")
+
+
+def test_train_launcher_corrupt_entry_warns_and_runs_untuned(tmp_path):
+    from repro.launch import train
+
+    wl = _wl(seq=32, batch=2)
+    plan = tune(wl, "tpu-v5e", method="nccl", repo=str(tmp_path))
+    path = PlanRepository(tmp_path).path_for(plan.fingerprint, "tpu-v5e")
+    with open(path, "w") as f:
+        f.write("{not json")
+    argv = ["--arch", "llama3-8b", "--smoke", "--steps", "1"]
+    argv += ["--seq", "32", "--batch", "2", "--plan-repo", str(tmp_path)]
+    with pytest.warns(RuntimeWarning, match="launching untuned"):
+        train.main(argv)
+    assert C.active_runtime_plan() == {}
+
+
+def test_tune_repo_auto_put(tmp_path):
+    wl = _wl()
+    plan = tune(wl, "tpu-v5e", method="nccl", repo=str(tmp_path))
+    repo = PlanRepository(tmp_path)
+    assert repo.resolve(wl, "tpu-v5e") == plan
+    # a PlanRepository instance is accepted too, and coerces to itself
+    assert as_repository(repo) is repo
+    plan2 = tune(wl, "a40-nvlink", method="nccl", repo=repo)
+    assert repo.resolve(wl, "a40-nvlink") == plan2
+    assert len(repo) == 2
+
+
+# ---------------------------------------------------------------------------
+# acceptance: launch/train.py --plan-repo installs the stored plan with
+# zero tuning work; a miss warns and launches untuned
+# ---------------------------------------------------------------------------
+
+
+def test_train_launcher_resolves_repo_plan_end_to_end(tmp_path, capsys):
+    from repro.launch import train
+
+    wl = _wl(seq=32, batch=2)
+    plan = tune(wl, "tpu-v5e", repo=str(tmp_path))
+    argv = ["--arch", "llama3-8b", "--smoke", "--steps", "1"]
+    argv += ["--seq", "32", "--batch", "2"]
+    argv += ["--plan-repo", str(tmp_path)]
+    argv += ["--plan-parallel", "fsdp:8", "--plan-hardware", "tpu-v5e"]
+    train.main(argv)
+    out = capsys.readouterr().out
+    assert "zero tuning at launch" in out
+    # the launcher-installed knobs are exactly the stored plan's lowering
+    rt = plan.runtime_plan(wl)
+    assert C.active_runtime_plan() == rt
+    for sid, knobs in rt.items():
+        assert C.runtime_for(sid) == knobs
+
+
+def test_train_launcher_repo_miss_warns_and_runs_untuned(tmp_path):
+    from repro.launch import train
+
+    argv = ["--arch", "llama3-8b", "--smoke", "--steps", "1"]
+    argv += ["--seq", "32", "--batch", "2", "--plan-repo", str(tmp_path)]
+    with pytest.warns(RuntimeWarning, match="launches untuned"):
+        train.main(argv)
+    assert C.active_runtime_plan() == {}
+
+
+def test_serve_launcher_resolves_repo_plan(tmp_path, capsys):
+    from repro.launch import serve
+
+    cfg = get_smoke_config("llama3-8b")
+    pp = ParallelPlan(kind="fsdp", dp=8)
+    wl = extract_workload(cfg, pp, seq=32, global_batch=2, decode=True)
+    plan = tune(wl, "tpu-v5e", repo=str(tmp_path))
+    argv = ["--arch", "llama3-8b", "--smoke", "--batch", "2"]
+    argv += ["--prompt-len", "4", "--max-new", "2", "--max-seq", "32"]
+    argv += ["--plan-repo", str(tmp_path)]
+    serve.main(argv)
+    out = capsys.readouterr().out
+    assert "zero tuning at launch" in out
+    assert C.active_runtime_plan() == plan.runtime_plan(wl)
+
+
+def test_parse_parallel_specs():
+    from repro.launch.plan import parse_parallel
+
+    assert parse_parallel("fsdp:8").dp == 8
+    assert parse_parallel("tp:4").tp == 4
+    assert parse_parallel("ep:16").ep == 16
+    pp = parse_parallel("pp:4:8")
+    assert pp.pp == 4 and pp.microbatches == 8
+    with pytest.raises(ValueError, match="unknown parallel kind"):
+        parse_parallel("zz:2")

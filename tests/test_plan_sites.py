@@ -1,0 +1,374 @@
+"""Per-site plan addressing end-to-end: scoped runtime contexts, the
+hierarchical SiteId resolution, plan-aware model builders (one plan with
+divergent per-site configs must change the emitted structure of two
+distinct layers of the same model), the ``set_runtime_plan`` deprecation
+shim, the chunked-collective divisibility warnings, and ``TunedPlan.diff``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.core import ParallelPlan, extract_workload, tune
+from repro.core.workload import comm_site_meta
+from repro.launch.mesh import make_mesh
+from repro.models import dense, model as M
+from repro.parallel import collectives as C
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan_state():
+    yield
+    C.install_runtime_plan({})
+
+
+def _mesh1():
+    return make_mesh((1,), ("model",))
+
+
+def _fsdp_wl(seq=64, batch=4):
+    cfg = get_smoke_config("llama3-8b")
+    plan = ParallelPlan(kind="fsdp", dp=8)
+    return extract_workload(cfg, plan, seq=seq, global_batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# resolution: exact site > dotted prefix > class > default
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_site_resolution():
+    rt_exact = C.CollectiveRuntime("ring", 8)
+    rt_layer = C.CollectiveRuntime("chunked", 4)
+    rt_class = C.CollectiveRuntime("chunked", 2)
+    plan = {"tp.layer0.mlp.ag": rt_exact, "tp.layer0": rt_layer, "ag": rt_class}
+    with C.use_runtime_plan(plan):
+        assert C.runtime_for("tp.layer0.mlp.ag") == rt_exact
+        assert C.explain_runtime("tp.layer0.mlp.ag")[1] == "tp.layer0.mlp.ag"
+        # no exact entry -> nearest dotted prefix
+        assert C.runtime_for("tp.layer0.mlp.rs") == rt_layer
+        assert C.explain_runtime("tp.layer0.mlp.rs")[1] == "tp.layer0"
+        # no prefix at all -> the collective's class
+        assert C.runtime_for("tp.layer9.mlp.ag", "ag") == rt_class
+        assert C.explain_runtime("tp.layer9.mlp.ag", "ag")[1] == "ag"
+        # nothing matches -> XLA defaults
+        assert C.runtime_for("tp.layer9.mlp.rs", "rs").strategy == "xla"
+        assert C.explain_runtime("tp.layer9.mlp.rs", "rs")[1] == ""
+    # legacy bare-class addressing is an exact match, as before
+    with C.use_runtime_plan({"ag": rt_class}):
+        assert C.runtime_for("ag") == rt_class
+
+
+def test_runtime_plan_lowered_per_site_not_three_buckets():
+    """One tuned plan must carry distinct entries per comm site (plus the
+    prefix/class fallbacks), and two sites of the same class may disagree."""
+    wl = _fsdp_wl()
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    # force divergent per-site configs: layer2's AG chunks much finer
+    sites = {(s["group"], s["comm"]): s["site"] for s in comm_site_meta(wl)}
+    for key, sid in sites.items():
+        if sid == "fsdp.layer2.ag_params":
+            plan.configs[key] = dataclasses.replace(plan.configs[key], chunk_kb=64)
+    rt = plan.runtime_plan(wl)
+    assert rt["fsdp.layer1.ag_params"] != rt["fsdp.layer2.ag_params"]
+    # hierarchy present: exact sites, dotted prefixes, legacy class buckets
+    assert "fsdp.layer1" in rt and "fsdp" in rt and "ag" in rt and "rs" in rt
+    # class bucket equals the first site's knobs (legacy bit-identity)
+    assert rt["ag"] == rt["fsdp.layer1.ag_params"]
+
+
+# ---------------------------------------------------------------------------
+# scoped application: applied() nests and restores on every exit path
+# ---------------------------------------------------------------------------
+
+
+def test_applied_scoping_nested_and_exception_paths():
+    wl = _fsdp_wl()
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    base = C.CollectiveRuntime("ring", 3)
+    C.install_runtime_plan({"ag": base})  # process-wide base
+    sid = "fsdp.layer1.ag_params"
+    assert C.runtime_for(sid, "ag") == base  # class fallback pre-scope
+    with plan.applied(wl) as rt:
+        assert C.runtime_for(sid) == rt[sid]  # exact site inside
+        inner = {sid: C.CollectiveRuntime("chunked", 7)}
+        with C.use_runtime_plan(inner):  # nested scope shadows
+            assert C.runtime_for(sid).num_chunks == 7
+        assert C.runtime_for(sid) == rt[sid]  # inner exit restores
+    assert C.runtime_for(sid, "ag") == base  # outer exit restores
+    with pytest.raises(RuntimeError):  # exception path restores too
+        with plan.applied(wl):
+            assert C.runtime_for(sid) != base
+            raise RuntimeError("boom")
+    assert C.runtime_for(sid, "ag") == base
+    assert C.active_runtime_plan() == {"ag": base}
+
+
+def test_set_runtime_plan_shim_warns_with_bit_identical_knobs():
+    rt = tune(_fsdp_wl(), "tpu-v5e").runtime_plan()
+    with pytest.warns(DeprecationWarning, match="set_runtime_plan"):
+        C.set_runtime_plan(rt)
+    legacy = {k: C.runtime_for(k) for k in rt}
+    legacy_active = C.active_runtime_plan()
+    C.install_runtime_plan(rt)
+    assert {k: C.runtime_for(k) for k in rt} == legacy
+    assert C.active_runtime_plan() == legacy_active
+
+
+# ---------------------------------------------------------------------------
+# the tentpole acceptance: divergent per-site configs -> two distinct
+# layers of one model emit different structure (jaxpr level; the slow
+# HLO-level variant lives in test_apply_runtime.py)
+# ---------------------------------------------------------------------------
+
+
+def _layer_jaxpr(cfg, params, layer, site, mesh, x, pos):
+    lp = jax.tree.map(lambda a: a[layer], params["trunk"]["dense_layers"])
+
+    def one(q, v):
+        out, _, _ = dense.layer_fwd(
+            q, cfg, v, pos, None, use_moe=False, mesh=mesh, site=site
+        )
+        return out
+
+    return str(jax.make_jaxpr(one)(lp, x))
+
+
+def test_divergent_plan_changes_two_layers_structure():
+    mesh = _mesh1()
+    cfg = get_smoke_config("llama3-8b")  # 2 layers
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = jnp.ones((2, 8, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    divergent = {
+        "tp.layer0.mlp": C.CollectiveRuntime("chunked", 2),
+        "tp.layer1.mlp": C.CollectiveRuntime("chunked", 4),
+    }
+    uniform = {"tp": C.CollectiveRuntime("chunked", 2)}
+    with C.use_runtime_plan(divergent):
+        j0 = _layer_jaxpr(cfg, params, 0, "tp.layer0.mlp", mesh, x, pos)
+        j1 = _layer_jaxpr(cfg, params, 1, "tp.layer1.mlp", mesh, x, pos)
+    assert j0 != j1, "two layers must emit different chunk structure"
+    with C.use_runtime_plan(uniform):
+        u0 = _layer_jaxpr(cfg, params, 0, "tp.layer0.mlp", mesh, x, pos)
+        u1 = _layer_jaxpr(cfg, params, 1, "tp.layer1.mlp", mesh, x, pos)
+    assert u0 == u1, "a uniform plan must not split the layers"
+    assert u0 == j0 and u1 != j1  # only layer1's site diverged
+
+
+def test_divergent_plan_from_tuned_artifact_end_to_end():
+    """Same property through the real artifact: a TunedPlan whose per-site
+    configs diverge lowers+applies to per-layer different jaxprs."""
+    mesh = _mesh1()
+    cfg = get_smoke_config("llama3-8b")
+    pp = ParallelPlan(kind="tp", tp=8)
+    wl = extract_workload(cfg, pp, seq=64, global_batch=4, layers=2)
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    sites = {s["site"]: (s["group"], s["comm"]) for s in comm_site_meta(wl)}
+    key0 = sites["tp.layer0.mlp.ar.fwd.mb0"]
+    plan.configs[key0] = dataclasses.replace(plan.configs[key0], chunk_kb=16)
+    rt = plan.runtime_plan(wl)
+    assert rt["tp.layer0.mlp"] != rt["tp.layer1.mlp"]
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = jnp.ones((2, 8, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    with plan.applied(wl):
+        j0 = _layer_jaxpr(cfg, params, 0, "tp.layer0.mlp", mesh, x, pos)
+        j1 = _layer_jaxpr(cfg, params, 1, "tp.layer1.mlp", mesh, x, pos)
+    assert j0 != j1
+
+
+def test_sited_trunk_matches_gspmd_numerics():
+    mesh = _mesh1()
+    plan = {
+        "tp": C.CollectiveRuntime("chunked", 2),
+        "ep": C.CollectiveRuntime("chunked", 2),
+    }
+    for arch in ("llama3-8b", "deepseek-moe-16b"):
+        cfg = get_smoke_config(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.arange(16).reshape(2, 8) % cfg.vocab_size}
+        ref, _, aux_ref = M.forward_hidden(cfg, params, batch)
+        with C.use_runtime_plan(plan):
+            out, _, aux = M.forward_hidden(cfg, params, batch, mesh=mesh)
+        assert jnp.allclose(ref, out, atol=1e-4), arch
+        assert jnp.allclose(aux_ref, aux), arch
+
+
+def test_moe_per_layer_a2a_sites_change_structure():
+    mesh = _mesh1()
+    cfg = get_smoke_config("deepseek-moe-16b")  # 1 dense + 1 moe layer
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(16).reshape(2, 8) % cfg.vocab_size}
+
+    def trunk_jaxpr(plan):
+        def one(q):
+            return M.forward_hidden(cfg, q, batch, mesh=mesh)[0]
+
+        with C.use_runtime_plan(plan):
+            return str(jax.make_jaxpr(one)(params))
+
+    a = trunk_jaxpr({"ep.layer0.moe": C.CollectiveRuntime("chunked", 2)})
+    b = trunk_jaxpr({"ep.layer0.moe": C.CollectiveRuntime("chunked", 4)})
+    assert a != b
+    # disp and comb are separately addressable
+    c = trunk_jaxpr({"ep.layer0.moe.a2a_disp": C.CollectiveRuntime("chunked", 2)})
+    assert c != a and c != trunk_jaxpr({})
+
+
+def test_sited_trunk_falls_back_on_inapplicable_mesh():
+    cfg = get_smoke_config("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(14).reshape(2, 7) % cfg.vocab_size}
+    bad_mesh = make_mesh((1,), ("stage",))  # no "model" axis at all
+    with pytest.warns(RuntimeWarning, match="plan-aware trunk disabled"):
+        out, _, _ = M.forward_hidden(cfg, params, batch, mesh=bad_mesh)
+    ref, _, _ = M.forward_hidden(cfg, params, batch)
+    assert jnp.allclose(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# satellite: indivisible chunk counts warn once, naming the site
+# ---------------------------------------------------------------------------
+
+
+def test_ring_ag_indivisible_chunks_warn_with_site():
+    mesh = _mesh1()
+    x = jnp.ones((2, 8, 16))
+    w = jnp.ones((16, 8))
+    with pytest.warns(RuntimeWarning, match="tp.layer0.mlp.ag"):
+        C.ring_ag_matmul(
+            x,
+            w,
+            mesh,
+            axis="model",
+            x_spec=P(None, "model", None),
+            w_spec=P(None, "model"),
+            out_spec=P(None, None, "model"),
+            num_chunks=3,
+            site="tp.layer0.mlp.ag",
+        )
+
+
+def test_mm_rs_indivisible_chunks_warn_with_site():
+    mesh = _mesh1()
+    x = jnp.ones((2, 8, 16))
+    w = jnp.ones((16, 8))
+    with pytest.warns(RuntimeWarning, match="my.rs.site"):
+        C.mm_reduce_scatter(
+            x,
+            w,
+            mesh,
+            axis="model",
+            x_spec=P(None, None, "model"),
+            w_spec=P("model", None),
+            out_spec=P(None, "model", None),
+            num_chunks=3,
+            site="my.rs.site",
+        )
+
+
+def test_a2a_indivisible_chunks_warn_with_site():
+    mesh = _mesh1()
+    x = jnp.ones((4, 4, 10))
+    with pytest.warns(RuntimeWarning, match="ep.layer0.moe.a2a_disp"):
+        C.chunked_all_to_all(
+            x,
+            mesh,
+            axis="model",
+            split_axis=1,
+            concat_axis=0,
+            x_spec=P("model", None, None),
+            out_spec=P("model", None, None),
+            num_chunks=3,
+            site="ep.layer0.moe.a2a_disp",
+        )
+
+
+def test_pipeline_p2p_site_resolves_and_warns_on_indivisible():
+    from repro.parallel.pipeline import pipeline_apply
+
+    mesh = make_mesh((1,), ("stage",))
+    params = {"w": jnp.ones((1, 5, 5))}
+
+    def fn(p, x):
+        return x @ p["w"]
+
+    def make_run():
+        # fresh callable per trace: jax caches traces per function object,
+        # and the plan is read at trace time
+        def run(v):
+            return pipeline_apply(
+                fn, params, v, mesh=mesh, axis="stage", microbatches=2
+            )
+
+        return run
+
+    x = jnp.ones((4, 5))
+    with C.use_runtime_plan({"pp": C.CollectiveRuntime("chunked", 3)}):
+        with pytest.warns(RuntimeWarning, match="pp.tick.p2p"):
+            y = pipeline_apply(
+                fn,
+                params,
+                x,
+                mesh=mesh,
+                axis="stage",
+                microbatches=2,
+                site="pp.tick.p2p",
+            )
+    assert jnp.allclose(y, x @ params["w"][0])
+    # divisible chunk counts lower silently and change the jaxpr
+    with C.use_runtime_plan({"p2p": C.CollectiveRuntime("chunked", 5)}):
+        j5 = str(jax.make_jaxpr(make_run())(x))
+    j1 = str(jax.make_jaxpr(make_run())(x))
+    assert j5 != j1
+
+
+# ---------------------------------------------------------------------------
+# satellite: TunedPlan.diff
+# ---------------------------------------------------------------------------
+
+
+def test_plan_diff_field_level_per_site():
+    wl = _fsdp_wl()
+    a = tune(wl, "tpu-v5e", method="nccl")
+    b = tune(wl, "tpu-v5e", method="nccl")
+    d = a.diff(b)
+    assert d["changed"] == {} and d["only_self"] == [] == d["only_other"]
+    assert d["meta"] == {}
+    # mutate one site, two fields
+    key = next(iter(b.configs))
+    sid = {(s["group"], s["comm"]): s["site"] for s in b.sites}[key]
+    b.configs[key] = dataclasses.replace(b.configs[key], nc=99, chunk_kb=1)
+    b.method = "autoccl"
+    d = a.diff(b)
+    assert set(d["changed"]) == {sid}
+    assert set(d["changed"][sid]) == {"nc", "chunk_kb"}
+    assert d["changed"][sid]["nc"][1] == 99
+    assert d["meta"]["method"] == ["nccl", "autoccl"]
+    # one-sided sites are reported, not diffed
+    dropped = dict(b.configs)
+    dropped.pop(key)
+    b.configs = dropped
+    d = a.diff(b)
+    assert sid in d["only_self"] and sid not in d["changed"]
+
+
+def test_plan_diff_cli(tmp_path, capsys):
+    from repro.core import session
+
+    a = tune(_fsdp_wl(), "tpu-v5e", method="nccl")
+    pa, pb = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    a.save(pa)
+    key = next(iter(a.configs))
+    a.configs[key] = dataclasses.replace(a.configs[key], nt=7)
+    a.save(pb)
+    assert session._main(["diff", pa, pa]) == 0
+    out = capsys.readouterr().out
+    assert "identical" in out
+    assert session._main(["diff", pa, pb]) == 1
+    out = capsys.readouterr().out
+    assert "nt" in out and "7" in out

@@ -121,7 +121,7 @@ def test_plan_save_load(tmp_path):
     try:
         assert activate(tmp_path / "plan.json") == plan.runtime_plan()
     finally:
-        collectives.set_runtime_plan({})
+        collectives.install_runtime_plan({})
 
 
 def test_plan_refuses_mismatched_workload():
@@ -183,8 +183,15 @@ def test_launcher_tuned_plan_path_matches_in_process(tmp_path):
         # launching a different model against the plan warns loudly
         with pytest.warns(RuntimeWarning, match="re-tune"):
             apply_tuned_plan(path, quiet=True, expect_arch="phi2-2b")
+        # the legacy process-global entry point still works, warns, and
+        # resolves bit-identically to the non-deprecated install
+        with pytest.warns(DeprecationWarning, match="set_runtime_plan"):
+            collectives.set_runtime_plan(rt)
+        assert collectives.active_runtime_plan() == rt
+        for site, knobs in rt.items():
+            assert collectives.runtime_for(site) == knobs
     finally:
-        collectives.set_runtime_plan({})
+        collectives.install_runtime_plan({})
     assert collectives._resolve_chunks(None, "ag") == 1   # plan cleared
 
 
