@@ -1,26 +1,63 @@
-"""Batched serving example: prefill + greedy decode on a small dense model,
-then a decode-throughput probe (the serve_step the decode dry-runs lower).
+"""Plan-aware batched serving: tune a decode-shape plan once, store it in a
+PlanRepository, then serve a *different* batch size — the engine's
+tolerance-band lookup finds the nearest tuned shape (a banded, non-exact
+hit) and decodes under its per-site chunked collectives at the
+``serve.layer{i}.*`` SiteIds.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
+import tempfile
+
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core import ParallelPlan, extract_decode_workload, tune
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving import make_engine
 
 cfg = get_smoke_config("h2o-danube-1.8b")
 params = M.init_params(cfg, jax.random.PRNGKey(0))
-engine = Engine(cfg, params, batch_size=4, max_seq=96)
+
+# 1. tune once at one decode shape (batch 4), auto-stored in the repository
+repo = tempfile.mkdtemp(prefix="plan_repo_")
+pp = ParallelPlan(kind="tp", tp=2)
+wl = extract_decode_workload(cfg, pp, global_batch=4, seq=96)
+plan = tune(wl, "tpu-v5e", method="lagom", repo=repo)
+serve_sites = [s for s in plan.runtime_plan() if s.startswith("serve.")]
+print(
+    f"tuned decode plan: {len(serve_sites)} serve.* sites "
+    f"(e.g. {serve_sites[0]}) stored in {repo}"
+)
+
+# 2. serve at a batch the repo was never tuned for (6 != 4): the band
+#    resolves the nearest same-structure shape instead of missing
+engine = make_engine(
+    cfg,
+    params,
+    mode="fixed",
+    batch_size=6,
+    max_seq=96,
+    repo=repo,
+    plan_parallel="tp:2",
+    plan_band=0.5,
+)
 
 rs = np.random.default_rng(0)
-prompts = [rs.integers(0, cfg.vocab_size, size=12).astype(np.int32)
-           for _ in range(4)]
+prompts = [rs.integers(0, cfg.vocab_size, size=12).astype(np.int32) for _ in range(6)]
 outs = engine.generate(prompts, max_new=12)
 for i, o in enumerate(outs):
     print(f"request {i}: prompt={prompts[i][:6].tolist()}... -> {o}")
 
+stats = engine.plan_stats
+print(
+    f"\nplan resolution: {stats['exact']} exact, {stats['banded']} banded, "
+    f"{stats['miss']} miss"
+)
+assert stats["banded"] == 1 and stats["miss"] == 0, stats
+
 probe = engine.throughput_probe()
-print(f"\ndecode: {probe['tokens_per_s']:.1f} tok/s "
-      f"({probe['s_per_token']*1e3:.2f} ms/step @ batch 4)")
+print(
+    f"decode: {probe['tokens_per_s']:.1f} tok/s "
+    f"({probe['s_per_token'] * 1e3:.2f} ms/step @ batch 6, banded plan)"
+)

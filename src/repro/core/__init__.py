@@ -20,23 +20,26 @@
                 automatic reuse at launch (--plan-repo)
 """
 from repro.core.comm_params import CommConfig, min_config, vendor_default
-from repro.core.extract import ParallelPlan, extract_workload
+from repro.core.extract import (ParallelPlan, extract_decode_workload,
+                                extract_workload, parse_parallel)
 from repro.core.hardware import A40_NVLINK, A40_PCIE, PROFILES, TPU_V5E, Hardware
 from repro.core.plan_repo import PlanRepoError, PlanRepository
 from repro.core.session import (PlanMismatchError, SearchBackend,
                                 SearchOutcome, TunedPlan, available_methods,
-                                register_backend, tune, workload_fingerprint)
+                                register_backend, structure_fingerprint, tune,
+                                workload_fingerprint, workload_shape)
 from repro.core.simulator import Measurement, Simulator
 from repro.core.workload import CommOp, CompOp, OverlapGroup, Workload
 
 __all__ = [
     "CommConfig", "min_config", "vendor_default",
-    "ParallelPlan", "extract_workload",
+    "ParallelPlan", "extract_decode_workload", "extract_workload",
+    "parse_parallel",
     "Hardware", "A40_PCIE", "A40_NVLINK", "TPU_V5E", "PROFILES",
     "Simulator", "Measurement",
     "CompOp", "CommOp", "OverlapGroup", "Workload",
     "tune", "TunedPlan", "PlanMismatchError", "SearchBackend",
     "SearchOutcome", "register_backend", "available_methods",
-    "workload_fingerprint",
+    "structure_fingerprint", "workload_fingerprint", "workload_shape",
     "PlanRepository", "PlanRepoError",
 ]

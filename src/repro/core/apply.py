@@ -70,6 +70,16 @@ def site_runtime_plan(sites: List[Dict],
     return plan
 
 
+def plan_digest(rt: Dict[str, CollectiveRuntime]) -> tuple:
+    """Hashable identity of a lowered runtime plan.  Plans are consumed at
+    *trace* time (``collectives.runtime_for`` inside the model builders),
+    so a jitted step traced under one plan silently keeps that plan's
+    chunk structure forever — plan-aware serving engines key their
+    compiled-step caches on this digest to retrace per plan instead."""
+    return tuple(sorted((sid, r.strategy, r.num_chunks)
+                        for sid, r in rt.items()))
+
+
 def runtime_plan(wl: Workload, configs: ConfigSet) -> Dict[str, CollectiveRuntime]:
     """Per-site runtime plan (see ``site_runtime_plan``) for a live workload."""
     return site_runtime_plan(comm_site_meta(wl), configs)

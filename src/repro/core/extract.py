@@ -204,3 +204,77 @@ def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
     return Workload(name=f"{cfg.name}:{plan.kind}", groups=groups,
                     meta={"flops": total_flops, "seq": seq,
                           "global_batch": global_batch})
+
+
+def extract_decode_workload(cfg, plan: ParallelPlan, *, global_batch: int,
+                            seq: int) -> Workload:
+    """One *serving decode step* under ``plan``, with ``serve.*`` SiteIds.
+
+    Unlike the per-kind training extractions above, serving deploys one
+    combined topology: every layer contributes an attention group (TP
+    AllReduce at ``serve.layer{i}.attn.ar``) plus either a dense MLP group
+    (``serve.layer{i}.mlp.ag`` / ``.rs`` — the ``dense.tp_mlp`` pair) or a
+    MoE group (``serve.layer{i}.moe.a2a_disp`` / ``.a2a_comb``), with
+    ``i`` the *global* layer index — exactly the sites the sited decode
+    path (``model.decode_step(mesh=...)``) resolves at trace time.  Comms
+    appear only for degrees > 1, so a ``tp:1``/``ep:1`` plan yields a
+    collective-free (but still fingerprintable) workload.
+
+    ``global_batch`` is the number of sequences in flight (= tokens per
+    decode step); ``seq`` the KV-cache context length.  Both land in
+    ``meta`` as the banded shape coordinates tolerance-band repository
+    resolution interpolates over.
+    """
+    dsize = plan.dsize
+    tp = max(1, plan.tp)
+    ep = max(1, plan.ep)
+    m = max(1, global_batch)           # one token per in-flight sequence
+    groups: List[OverlapGroup] = []
+    attn = _attn_ops(cfg, m, seq, m, tp, dsize, "attn")
+    mlp = _mlp_ops(cfg, m, tp, dsize, "mlp")
+    act_bytes = m * cfg.d_model * dsize
+    for i in range(cfg.num_layers):
+        attn_comms = []
+        if tp > 1:
+            attn_comms.append(CommOp(f"ar.L{i}", "allreduce", act_bytes, tp,
+                                     site=f"serve.layer{i}.attn.ar"))
+        groups.append(OverlapGroup(f"decode.L{i}.attn", comps=list(attn),
+                                   comms=attn_comms))
+        if cfg.is_moe and i >= cfg.first_dense_layers:
+            experts = _expert_ops(cfg, max(1, m // ep), ep, dsize, "moe")
+            moe_comms = []
+            if ep > 1:
+                a2a_bytes = m * cfg.top_k * cfg.d_model * dsize / ep
+                moe_comms = [CommOp(f"a2a.{d}.L{i}", "alltoall", a2a_bytes,
+                                    ep, site=f"serve.layer{i}.moe.a2a_{d}")
+                             for d in ("disp", "comb")]
+            groups.append(OverlapGroup(f"decode.L{i}.moe", comps=experts,
+                                       comms=moe_comms))
+        else:
+            mlp_comms = []
+            if tp > 1:
+                mlp_comms = [CommOp(f"ag.L{i}", "allgather", act_bytes, tp,
+                                    site=f"serve.layer{i}.mlp.ag"),
+                             CommOp(f"rs.L{i}", "reducescatter", act_bytes,
+                                    tp, site=f"serve.layer{i}.mlp.rs")]
+            groups.append(OverlapGroup(f"decode.L{i}.mlp", comps=list(mlp),
+                                       comms=mlp_comms))
+    total_flops = sum(g.total_flops for g in groups)
+    return Workload(name=f"{cfg.name}:serve", groups=groups,
+                    meta={"flops": total_flops, "seq": seq,
+                          "global_batch": global_batch, "decode": 1.0})
+
+
+def parse_parallel(spec: str) -> ParallelPlan:
+    """``kind[:degree[:microbatches]]`` -> ``ParallelPlan`` — e.g.
+    ``fsdp:8``, ``tp:4``, ``ep:16``, ``pp:4:8``.  The degree lands on the
+    kind's own axis (dp for fsdp)."""
+    parts = spec.split(":")
+    kind = parts[0]
+    deg = int(parts[1]) if len(parts) > 1 else 8
+    mb = int(parts[2]) if len(parts) > 2 else 2
+    axes = {"fsdp": "dp", "tp": "tp", "ep": "ep", "pp": "pp"}
+    if kind not in axes:
+        raise ValueError(f"unknown parallel kind {kind!r} in {spec!r} "
+                         f"(expected one of {sorted(axes)})")
+    return ParallelPlan(kind=kind, microbatches=mb, **{axes[kind]: deg})

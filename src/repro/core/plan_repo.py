@@ -14,14 +14,22 @@ Layout: one strict-RFC JSON file per key, named
 ``get`` re-verifies the loaded plan's own provenance against the key and
 refuses misfiled or tampered entries (``PlanRepoError``) rather than
 installing configs tuned for a different structure.
+
+``resolve(band=...)`` extends the exact lookup to a *tolerance band*: a
+serving fleet's decode batch drifts under traffic, so an exact-shape miss
+that is a structural hit (same ``session.structure_fingerprint``) at a
+nearby (seq, global_batch) resolves to the nearest tuned shape instead of
+launching untuned.  Provenance is still verified entry by entry.
 """
 from __future__ import annotations
 
+import math
 import os
 from typing import Iterable, List, Optional, Tuple, Union
 
 from repro.core.hardware import Hardware
-from repro.core.session import TunedPlan, workload_fingerprint
+from repro.core.session import (TunedPlan, structure_fingerprint,
+                                workload_fingerprint, workload_shape)
 from repro.core.workload import Workload
 
 
@@ -112,11 +120,69 @@ class PlanRepository:
         return plan
 
     def resolve(
-        self, wl: Workload, hardware: Union[Hardware, str]
+        self, wl: Workload, hardware: Union[Hardware, str], *,
+        band: float = 0.0
     ) -> Optional[TunedPlan]:
         """The stored plan matching ``wl``'s structural fingerprint on
-        ``hardware``, or ``None`` — the launch-time lookup."""
-        return self.get(workload_fingerprint(wl), hardware)
+        ``hardware``, or ``None`` — the launch-time lookup.
+
+        ``band`` > 0 widens an exact-fingerprint miss into a *tolerance
+        band*: entries with the same shape-free ``structure_fingerprint``
+        (same model, parallel degrees, SiteIds — only batch/seq differ)
+        whose tuned (seq, global_batch) each sit within a relative
+        deviation of ``band`` (e.g. 0.5 = up to 1.5× off) are candidates,
+        nearest shape wins.  Every candidate is still provenance-verified
+        through ``get`` — banding relaxes the shape, never the trust
+        model.  ``band=0.0`` is the exact pre-band behavior."""
+        plan, _ = self.resolve_explain(wl, hardware, band=band)
+        return plan
+
+    def resolve_explain(
+        self, wl: Workload, hardware: Union[Hardware, str], *,
+        band: float = 0.0
+    ) -> Tuple[Optional[TunedPlan], str]:
+        """``resolve`` plus how the hit happened: ``(plan, "exact")``,
+        ``(plan, "banded")`` or ``(None, "miss")`` — what serving engines
+        record in their plan stats and the CI smoke asserts on."""
+        hw = _hw_name(hardware)
+        fp = workload_fingerprint(wl)
+        plan = self.get(fp, hw)
+        if plan is not None:
+            return plan, "exact"
+        if band <= 0.0:
+            return None, "miss"
+        want_struct = structure_fingerprint(wl)
+        want_shape = workload_shape(wl)
+        best: Optional[TunedPlan] = None
+        best_d = math.inf
+        for efp, ehw, _path in self.entries():
+            if ehw != hw or efp == fp:
+                continue
+            cand = self.get(efp, ehw)    # provenance re-verified; a
+            if cand is None:             # tampered entry raises, not hides
+                continue
+            if not cand.structure or cand.structure != want_struct:
+                continue
+            d = _shape_distance(cand.shape, want_shape, band)
+            if d is not None and d < best_d:
+                best, best_d = cand, d
+        return (best, "banded") if best is not None else (None, "miss")
+
+
+def _shape_distance(tuned: dict, want: dict, band: float) -> Optional[float]:
+    """Log-scale distance between two banded shape records, or ``None``
+    when any dimension is missing, non-positive, or deviates beyond
+    ``band`` (relative: max/min − 1 ≤ band must hold per dimension)."""
+    total = 0.0
+    for key in ("seq", "global_batch"):
+        a, b = tuned.get(key), want.get(key)
+        if not a or not b or a <= 0 or b <= 0:
+            return None
+        ratio = max(a, b) / min(a, b)
+        if ratio - 1.0 > band + 1e-12:
+            return None
+        total += abs(math.log(ratio))
+    return total
 
 
 def as_repository(repo: Union[str, os.PathLike, PlanRepository]) -> PlanRepository:

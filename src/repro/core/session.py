@@ -53,7 +53,8 @@ from repro.core.comm_params import CommConfig
 from repro.core.hardware import PROFILES, Hardware
 from repro.core.scheduler import MODES, resolve_mode
 from repro.core.simulator import Measurement, Simulator
-from repro.core.workload import ConfigSet, Workload, comm_site_meta
+from repro.core.workload import (ConfigSet, Workload, comm_site_meta,
+                                 structure_components)
 
 PLAN_VERSION = 1
 
@@ -69,6 +70,24 @@ def workload_fingerprint(wl: Workload) -> str:
 
     payload = repr(tuple(group_fingerprint(g) for g in wl.groups))
     return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def structure_fingerprint(wl: Workload) -> str:
+    """Shape-free sibling of ``workload_fingerprint``: hashes
+    ``workload.structure_components`` (names, comm kinds/group sizes,
+    SiteIds — no payload magnitudes), so it is invariant under batch/seq
+    drift.  This is the key tolerance-band repository resolution matches
+    on: an exact-fingerprint miss may still be a structural hit at a
+    nearby shape."""
+    payload = repr(structure_components(wl))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def workload_shape(wl: Workload) -> Dict[str, int]:
+    """The banded shape coordinates a plan carries as provenance
+    (``TunedPlan.shape``): seq/global_batch from the workload meta."""
+    return {k: int(wl.meta[k]) for k in ("seq", "global_batch")
+            if k in wl.meta}
 
 
 class PlanMismatchError(ValueError):
@@ -237,11 +256,21 @@ class TunedPlan:
     profile_count: int = 0
     traces: List[Dict] = field(default_factory=list)
     cache_stats: Optional[Dict] = None
+    # banded provenance (defaults keep pre-band plan files loading): the
+    # shape-free structure_fingerprint and the (seq, global_batch) the plan
+    # was tuned at — what tolerance-band repository resolution matches on.
+    structure: str = ""
+    shape: Dict = field(default_factory=dict)
     version: int = PLAN_VERSION
 
     # -- structural guard --------------------------------------------------
     def matches(self, wl: Workload) -> bool:
         return self.fingerprint == workload_fingerprint(wl)
+
+    def matches_structure(self, wl: Workload) -> bool:
+        """Shape-free match: same program at a possibly different
+        batch/seq.  Pre-band plans (no recorded structure) never match."""
+        return bool(self.structure) and self.structure == structure_fingerprint(wl)
 
     def check(self, wl: Workload) -> None:
         fp = workload_fingerprint(wl)
@@ -468,7 +497,8 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
         seed=sim.seed, noise=sim.noise, noise_mode=sim.noise_mode,
         configs=dict(outcome.configs), sites=comm_site_meta(workload),
         profile_count=outcome.profile_count, traces=list(outcome.traces),
-        cache_stats=stats)
+        cache_stats=stats, structure=structure_fingerprint(workload),
+        shape=workload_shape(workload))
     if repo is not None:
         from repro.core.plan_repo import as_repository
         as_repository(repo).put(plan)
@@ -478,8 +508,8 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
 __all__ = [
     "MODES", "PLAN_VERSION", "PlanMismatchError", "SearchBackend",
     "SearchOutcome", "TunedPlan", "available_methods", "get_backend",
-    "load_plan", "register_backend", "tune", "unregister_backend",
-    "workload_fingerprint",
+    "load_plan", "register_backend", "structure_fingerprint", "tune",
+    "unregister_backend", "workload_fingerprint", "workload_shape",
 ]
 
 

@@ -99,6 +99,23 @@ def comm_site_meta(wl: Workload) -> List[Dict]:
             for ci, op in enumerate(g.comms)]
 
 
+def structure_components(wl: Workload) -> Tuple:
+    """Shape-free structural identity of a workload: everything that stays
+    fixed while batch/seq drift — the workload name (model × extraction
+    kind), and per group its name, comp op names, and each comm's
+    (kind, group_size, SiteId).  Two workloads with equal components are
+    the same program at different shapes, which is the soundness condition
+    for *tolerance-band* plan reuse (``PlanRepository.resolve(band=...)``):
+    the sites line up one-to-one, only payload magnitudes differ.  Contrast
+    ``session.workload_fingerprint``, which hashes op shapes/bytes and so
+    changes with every batch/seq."""
+    return (wl.name, tuple(
+        (g.name,
+         tuple(c.name for c in g.comps),
+         tuple((c.kind, c.group_size, c.site_id) for c in g.comms))
+        for g in wl.groups))
+
+
 def uniform_configs(wl: Workload, cfg: CommConfig) -> ConfigSet:
     return {site: cfg for site in wl.comm_sites()}
 

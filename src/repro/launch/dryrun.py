@@ -252,7 +252,9 @@ def main(argv=None):
                          "the resolved per-site runtime table (site id -> "
                          "knobs -> source plan key) before compiling, so "
                          "operators can audit what the plan actually "
-                         "changes at launch")
+                         "changes at launch; decode-shape plans list their "
+                         "serve.layer{i}.* sites here, which the serving "
+                         "engines consume via the sited trunk path")
     args = ap.parse_args(argv)
 
     if args.tuned_plan:

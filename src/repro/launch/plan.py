@@ -30,9 +30,13 @@ import warnings
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.apply import activate
-from repro.core.extract import ParallelPlan, extract_workload
+from repro.core.extract import (ParallelPlan, extract_decode_workload,
+                                extract_workload, parse_parallel)
 from repro.core.plan_repo import PlanRepoError, PlanRepository
 from repro.core.session import TunedPlan, workload_fingerprint
+
+__all__ = ["apply_tuned_plan", "parse_parallel", "print_runtime_table",
+           "resolve_plan_repo", "runtime_table"]
 
 
 def apply_tuned_plan(path: str, *, expect_arch: Optional[str] = None,
@@ -67,34 +71,30 @@ def apply_tuned_plan(path: str, *, expect_arch: Optional[str] = None,
 # plan repository resolution (--plan-repo)
 # ---------------------------------------------------------------------------
 
-def parse_parallel(spec: str) -> ParallelPlan:
-    """``kind[:degree[:microbatches]]`` -> ``ParallelPlan`` — e.g.
-    ``fsdp:8``, ``tp:4``, ``ep:16``, ``pp:4:8``.  The degree lands on the
-    kind's own axis (dp for fsdp)."""
-    parts = spec.split(":")
-    kind = parts[0]
-    deg = int(parts[1]) if len(parts) > 1 else 8
-    mb = int(parts[2]) if len(parts) > 2 else 2
-    axes = {"fsdp": "dp", "tp": "tp", "ep": "ep", "pp": "pp"}
-    if kind not in axes:
-        raise ValueError(f"unknown parallel kind {kind!r} in {spec!r} "
-                         f"(expected one of {sorted(axes)})")
-    return ParallelPlan(kind=kind, microbatches=mb, **{axes[kind]: deg})
-
-
 def resolve_plan_repo(repo_dir: str, cfg, *, parallel: str, hardware: str,
                       seq: int, global_batch: int, decode: bool = False,
+                      serve: bool = False, band: float = 0.0,
                       quiet: bool = False) -> Optional[Dict]:
     """Rebuild the launch workload from (arch config × parallel spec ×
     shape), look it up in the repository by (structural fingerprint,
     hardware), and install a hit (returns the runtime plan).  A miss —
     unknown structure or stale hardware — warns and returns ``None``
-    (launch proceeds untuned)."""
-    wl = extract_workload(cfg, parse_parallel(parallel), seq=seq,
-                          global_batch=global_batch, decode=decode)
+    (launch proceeds untuned).
+
+    ``serve=True`` builds the decode-shape workload with ``serve.*``
+    SiteIds (``extract_decode_workload``) — the serving launcher's path —
+    and ``band`` widens the lookup to tolerance-band resolution (nearest
+    tuned shape with the same structure; see ``PlanRepository.resolve``)."""
+    pp = parse_parallel(parallel)
+    if serve:
+        wl = extract_decode_workload(cfg, pp, global_batch=global_batch,
+                                     seq=seq)
+    else:
+        wl = extract_workload(cfg, pp, seq=seq, global_batch=global_batch,
+                              decode=decode)
     repo = PlanRepository(repo_dir)
     try:
-        plan = repo.resolve(wl, hardware)
+        plan, how = repo.resolve_explain(wl, hardware, band=band)
     except PlanRepoError as e:
         # a corrupt/misfiled entry must not brick the launch — treat it
         # as a miss, loudly
@@ -112,11 +112,14 @@ def resolve_plan_repo(repo_dir: str, cfg, *, parallel: str, hardware: str,
         return None
     rt = activate(plan)
     if not quiet:
+        shape = (f", banded hit: tuned shape {plan.shape} serves "
+                 f"(seq={seq}, batch={global_batch})" if how == "banded"
+                 else "")
         print(f"plan repository {repo_dir}: resolved "
               f"({plan.fingerprint[:12]}…, {plan.hardware}) -> "
               f"{plan.method}/{plan.mode} plan ({plan.profile_count} "
               f"profiles, zero tuning at launch); {len(rt)} addressable "
-              "site entries installed")
+              f"site entries installed{shape}")
     return rt
 
 

@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
         --smoke --batch 4 --max-new 16
+
+Plan-aware: ``--tuned-plan`` / ``--plan-repo`` hand the plan to the engine,
+which decodes under it through the sited explicit-collective path
+(``serve.layer{i}.*`` SiteIds) — per batch, via the scoped plan stack.
+``--engine continuous`` swaps in the continuous-batching engine, which
+re-resolves the repository plan as the in-flight batch shape drifts.
 """
 from __future__ import annotations
 
@@ -13,25 +19,38 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.launch.plan import apply_tuned_plan, resolve_plan_repo
 from repro.models import model as M
-from repro.serving.engine import Engine
+from repro.serving import Request, available_engines, make_engine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="fixed", choices=available_engines(),
+                    help="fixed: lockstep batch decode; continuous: per-slot "
+                         "caches with admit-time plan re-resolution")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch size (fixed engine) / slot count (continuous)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--tuned-plan", default=None,
                     help="saved session.TunedPlan JSON: lowered to per-site "
-                         "collective runtime knobs and installed for this "
-                         "run (every explicit chunked-collective site)")
+                         "collective runtime knobs; the engine decodes under "
+                         "it via the sited serve.layer{i}.* path (dense/moe "
+                         "families) and it is installed process-wide for "
+                         "every other explicit chunked-collective site")
     ap.add_argument("--plan-repo", default=None,
-                    help="PlanRepository directory: auto-resolve a stored "
-                         "plan for this launch's (workload fingerprint, "
-                         "hardware); untuned with a warning on a miss")
+                    help="PlanRepository directory: the engine re-resolves a "
+                         "stored plan for the decode-shape workload "
+                         "(fingerprint x hardware, exact first then the "
+                         "--plan-band tolerance band); untuned with a "
+                         "warning on a miss")
+    ap.add_argument("--plan-band", type=float, default=0.0,
+                    help="tolerance band for --plan-repo decode lookups: "
+                         "accept the nearest tuned plan whose structure "
+                         "matches and whose (seq, batch) deviate at most "
+                         "this relative fraction (0 = exact only)")
     ap.add_argument("--plan-parallel", default="fsdp:8",
                     help="parallel spec for the repo lookup: "
                          "kind[:degree[:microbatches]]")
@@ -40,29 +59,51 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    plan_kw = {}
     if args.tuned_plan:
         apply_tuned_plan(args.tuned_plan, expect_arch=cfg.name)
+        plan_kw = dict(plan=args.tuned_plan)
     elif args.plan_repo:
         resolve_plan_repo(args.plan_repo, cfg, parallel=args.plan_parallel,
                           hardware=args.plan_hardware, seq=args.max_seq,
-                          global_batch=args.batch, decode=True)
+                          global_batch=args.batch, serve=True,
+                          band=args.plan_band)
+        plan_kw = dict(repo=args.plan_repo, plan_hardware=args.plan_hardware,
+                       plan_parallel=args.plan_parallel,
+                       plan_band=args.plan_band)
     rng = jax.random.PRNGKey(0)
     params = M.init_params(cfg, rng)
-    engine = Engine(cfg, params, batch_size=args.batch, max_seq=args.max_seq)
 
     rs = np.random.default_rng(0)
     prompts = [rs.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
                for _ in range(args.batch)]
-    frames = None
-    if cfg.family == "audio":
-        frames = rs.standard_normal(
-            (args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32) * 0.02
-    outs = engine.generate(prompts, max_new=args.max_new, frames=frames)
-    for i, o in enumerate(outs):
-        print(f"request {i}: {o}")
-    probe = engine.throughput_probe()
-    print(f"decode throughput: {probe['tokens_per_s']:.1f} tok/s "
-          f"({probe['s_per_token']*1e3:.2f} ms/step, batch {args.batch})")
+
+    if args.engine == "continuous":
+        engine = make_engine(cfg, params, mode="continuous", slots=args.batch,
+                             max_seq=args.max_seq, **plan_kw)
+        for i, p in enumerate(prompts):
+            engine.submit(Request(rid=i, prompt=p, max_new=args.max_new))
+        done = sorted(engine.run(), key=lambda r: r.rid)
+        for r in done:
+            print(f"request {r.rid}: {r.out}")
+        stats = engine.plan_stats
+    else:
+        engine = make_engine(cfg, params, mode="fixed", batch_size=args.batch,
+                             max_seq=args.max_seq, **plan_kw)
+        frames = None
+        if cfg.family == "audio":
+            frames = rs.standard_normal(
+                (args.batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32) * 0.02
+        outs = engine.generate(prompts, max_new=args.max_new, frames=frames)
+        for i, o in enumerate(outs):
+            print(f"request {i}: {o}")
+        probe = engine.throughput_probe()
+        print(f"decode throughput: {probe['tokens_per_s']:.1f} tok/s "
+              f"({probe['s_per_token']*1e3:.2f} ms/step, batch {args.batch})")
+        stats = engine.plan_stats
+    if args.plan_repo:
+        print(f"plan resolution: {stats['exact']} exact, {stats['banded']} "
+              f"banded, {stats['miss']} miss ({stats['swaps']} hot-swaps)")
 
 
 if __name__ == "__main__":

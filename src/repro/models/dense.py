@@ -10,7 +10,8 @@ Plan-aware (sited) path: passing ``mesh=`` to ``trunk_fwd`` unrolls the
 stack into per-layer bodies whose feed-forward collectives are the
 *explicit* chunked helpers (``ring_ag_matmul`` / ``mm_reduce_scatter`` /
 the MoE all-to-alls), each addressed by a stable SiteId
-(``tp.layer{i}.mlp``, ``ep.layer{j}.moe``).  Each site resolves its own
+(``tp.layer{i}.mlp``, ``ep.layer{j}.moe``; ``serve.layer{i}.mlp`` /
+``serve.layer{i}.moe`` on the cached decode path).  Each site resolves its own
 knobs against the active tuned plan (``collectives.runtime_for``), so one
 ``TunedPlan`` can legitimately drive two layers of the same model to emit
 different chunk structure — the per-operator overlap decision flowing into
@@ -74,14 +75,32 @@ def tp_mlp(p: Params, x: jnp.ndarray, kind: str, mesh, *, axis: str = "model",
     return y
 
 
+def serve_mlp(p: Params, x: jnp.ndarray, kind: str, mesh, *,
+              axis: str = "model", site: str = "serve.mlp") -> jnp.ndarray:
+    """Decode-shape plan-aware MLP.  ``tp_mlp`` chunks the sequence axis,
+    which is length 1 at decode — so the in-flight batch is re-laid as
+    that axis, (B, S, D) -> (1, B·S, D): the tuned chunk counts then
+    decompose the collectives over the sequences in flight (serving's
+    microbatch).  Position-wise MLP, so this is numerically the identity
+    transform."""
+    B, S, D = x.shape
+    y = tp_mlp(p, x.reshape(1, B * S, D), kind, mesh, axis=axis, site=site)
+    return y.reshape(B, S, D)
+
+
 def layer_fwd(p: Params, cfg, x: jnp.ndarray, positions, cache: Optional[Params],
               *, use_moe: bool, mesh=None, axis: str = "model",
-              site: str = "") -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+              site: str = "", serve: bool = False,
+              ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
     """One decoder layer.  ``mesh`` switches the feed-forward onto the
     explicit plan-aware collectives, with ``site`` the layer's SiteId
-    prefix (``tp.layer{i}.mlp`` / ``ep.layer{j}.moe``)."""
+    prefix (``tp.layer{i}.mlp`` / ``ep.layer{j}.moe``, or
+    ``serve.layer{i}.*`` when ``serve`` marks the decode-shape layout)."""
     def ff(q, v):
         if mesh is not None and not use_moe:
+            if serve:
+                return serve_mlp(q, v, cfg.mlp_kind, mesh, axis=axis,
+                                 site=site or "serve.mlp")
             return tp_mlp(q, v, cfg.mlp_kind, mesh, axis=axis,
                           site=site or "tp.mlp")
         return L.mlp(q, v, cfg.mlp_kind)
@@ -171,33 +190,70 @@ def _sited_applicable(cfg, x, mesh, axis: str) -> Tuple[bool, str]:
     return True, ""
 
 
+def _sited_applicable_serve(cfg, x, mesh, axis: str) -> Tuple[bool, str]:
+    """Decode-shape variant: ``serve_mlp`` re-lays (B, S, D) as
+    (1, B·S, D), so the divisible axis is the whole in-flight token count,
+    not the per-sequence length."""
+    if axis not in mesh.axis_names:
+        return False, f"mesh has no {axis!r} axis"
+    n = dict(mesh.shape)[axis]
+    if (x.shape[0] * x.shape[1]) % n:
+        return False, (f"in-flight tokens {x.shape[0] * x.shape[1]} not "
+                       f"divisible by {n}")
+    if cfg.d_ff and cfg.d_ff % n:
+        return False, f"d_ff {cfg.d_ff} not divisible by {n}"
+    return True, ""
+
+
 def _trunk_fwd_sited(p: Params, cfg, x, positions, mesh, *, axis: str,
-                     remat: bool):
+                     remat: bool, caches=None):
     """Python-unrolled trunk: one body per layer so every layer's comm
-    sites resolve independently against the active plan.  Train/prefill
-    only (no caches); compile cost grows with depth, so this path is for
-    tuned deployments, not the 512-device dry-run compiles."""
+    sites resolve independently against the active plan.  Without caches
+    this is the train/prefill path (sites ``tp.layer{i}.mlp`` /
+    ``ep.layer{j}.moe``, segment-local MoE indices — PR 5's convention);
+    with caches it is the *serving* path, sites ``serve.layer{i}.mlp`` /
+    ``serve.layer{i}.moe`` with global layer indices, matching
+    ``core.extract.extract_decode_workload``.  Compile cost grows with
+    depth, so this path is for tuned deployments, not the 512-device
+    dry-run compiles."""
     aux_total = jnp.zeros((), jnp.float32)
     li = 0
+    new_caches: Dict[str, Any] = {}
     for seg, use_moe in (("dense_layers", False), ("moe_layers", True)):
         if seg not in p:
             continue
         stacked = p[seg]
         n_seg = jax.tree.leaves(stacked)[0].shape[0]
+        seg_cache = caches[seg] if caches is not None else None
+        layer_caches = []
         for j in range(n_seg):
             lp = jax.tree.map(lambda a: a[j], stacked)
-            site = f"ep.layer{j}.moe" if use_moe else f"tp.layer{li}.mlp"
+            if caches is None:
+                site = f"ep.layer{j}.moe" if use_moe else f"tp.layer{li}.mlp"
+                lc = None
+            else:
+                kind = "moe" if use_moe else "mlp"
+                site = f"serve.layer{li}.{kind}"
+                lc = jax.tree.map(lambda a: a[j], seg_cache)
 
-            def fl(q, v):
-                return layer_fwd(q, cfg, v, positions, None, use_moe=use_moe,
-                                 mesh=mesh, axis=axis, site=site)
+            def fl(q, v, c):
+                return layer_fwd(q, cfg, v, positions, c, use_moe=use_moe,
+                                 mesh=mesh, axis=axis, site=site,
+                                 serve=caches is not None)
 
-            if remat:
+            if remat and caches is None:
                 fl = jax.checkpoint(fl)
-            x, _, a = fl(lp, x)
+            x, nc, a = fl(lp, x, lc)
+            if nc is not None:
+                layer_caches.append(nc)
             aux_total = aux_total + a
             li += 1
-    return x, None, aux_total
+        if layer_caches:
+            # restack to the scan layout (leading L axis) so sited and
+            # scan decode caches are interchangeable pytrees
+            new_caches[seg] = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves), *layer_caches)
+    return x, (new_caches or None), aux_total
 
 
 def trunk_fwd(p: Params, cfg, x, positions, caches=None, *, remat: bool = False,
@@ -205,18 +261,22 @@ def trunk_fwd(p: Params, cfg, x, positions, caches=None, *, remat: bool = False,
     """caches: None | {"dense_layers": stacked_cache, "moe_layers": stacked_cache}.
 
     ``mesh``: opt into the plan-aware sited path (explicit per-layer
-    collectives addressed as ``tp.layer{i}.mlp`` / ``ep.layer{j}.moe``;
-    see module docstring).  Ignored for decode (``caches`` given); shapes
-    that violate the explicit helpers' divisibility fall back to the scan
-    path with a ``RuntimeWarning``."""
-    if mesh is not None and caches is None:
-        ok, why = _sited_applicable(cfg, x, mesh, tp_axis)
+    collectives addressed as ``tp.layer{i}.mlp`` / ``ep.layer{j}.moe`` for
+    train/prefill, ``serve.layer{i}.mlp`` / ``serve.layer{i}.moe`` for
+    cached decode/prefill; see module docstring).  Shapes that violate the
+    explicit helpers' divisibility fall back to the scan path with a
+    ``RuntimeWarning``."""
+    if mesh is not None:
+        if caches is None:
+            ok, why = _sited_applicable(cfg, x, mesh, tp_axis)
+        else:
+            ok, why = _sited_applicable_serve(cfg, x, mesh, tp_axis)
         if not ok:
             warnings.warn(f"plan-aware trunk disabled: {why}; using the "
                           "GSPMD scan path", RuntimeWarning, stacklevel=2)
         else:
             return _trunk_fwd_sited(p, cfg, x, positions, mesh, axis=tp_axis,
-                                    remat=remat)
+                                    remat=remat, caches=caches)
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
     for seg, use_moe in (("dense_layers", False), ("moe_layers", True)):

@@ -264,14 +264,17 @@ def attention(p: Params, cfg, x: jnp.ndarray, positions, *,
         slot = t % W if cfg.sliding_window else t
         ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
         cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-        spos = lax.dynamic_update_slice(cache["slot_pos"], t + jnp.arange(Sq, dtype=jnp.int32), (slot,))
+        # slot_pos is per-sequence (B, W): serving engines invalidate each
+        # row's right-padded prefill slots independently (slot_pos = -1)
+        row = jnp.broadcast_to(t + jnp.arange(Sq, dtype=jnp.int32)[None, :], (B, Sq))
+        spos = lax.dynamic_update_slice(cache["slot_pos"], row, (0, slot))
         new_cache = {"k": ck, "v": cv, "pos": t + Sq, "slot_pos": spos}
         k, v = ck, cv
         q_pos = t + jnp.arange(Sq)                                # (Sq,)
-        valid = (spos[None, :] >= 0) & (spos[None, :] <= q_pos[:, None])
+        valid = (spos[:, None, :] >= 0) & (spos[:, None, :] <= q_pos[None, :, None])
         if cfg.sliding_window:
-            valid &= spos[None, :] > q_pos[:, None] - cfg.sliding_window
-        bias = jnp.where(valid, 0.0, NEG_INF)[None, None, None, :, :]
+            valid &= spos[:, None, :] > q_pos[None, :, None] - cfg.sliding_window
+        bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :, :]
         out = _gqa_scores_to_out(q, k, v, bias, scale)
     else:
         Sk = k.shape[1]
@@ -315,7 +318,7 @@ def init_kv_cache(cfg, batch: int, seq_len: int, dtype=jnp.float32) -> Params:
         "k": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, W, cfg.num_kv_heads, cfg.head_dim), dtype),
         "pos": jnp.zeros((), jnp.int32),
-        "slot_pos": jnp.full((W,), -1, jnp.int32),
+        "slot_pos": jnp.full((batch, W), -1, jnp.int32),
     }
 
 
@@ -370,9 +373,15 @@ def mla_attention(p: Params, cfg, x: jnp.ndarray, positions, *,
         t = cache["pos"]
         c_kv = lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, t, 0))
         k_rope = lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, t, 0, 0))
-        new_cache = {"c_kv": c_kv, "k_rope": k_rope, "pos": t + Sq}
+        # per-sequence slot validity, same contract as the GQA cache: the
+        # serving engines invalidate right-padded prefill slots per row
+        row = jnp.broadcast_to(t + jnp.arange(Sq, dtype=jnp.int32)[None, :], (B, Sq))
+        spos = lax.dynamic_update_slice(cache["slot_pos"], row, (0, t))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope, "pos": t + Sq,
+                     "slot_pos": spos}
         Sk = c_kv.shape[1]
-        kmask = jnp.arange(Sk)[None, :] <= (t + jnp.arange(Sq))[:, None]  # (Sq,Sk)
+        kmask = (spos[:, None, :] >= 0) & (
+            spos[:, None, :] <= (t + jnp.arange(Sq))[None, :, None])  # (B,Sq,Sk)
     else:
         Sk = Sq
         kmask = None
@@ -389,7 +398,7 @@ def mla_attention(p: Params, cfg, x: jnp.ndarray, positions, *,
         logits = (jnp.einsum("bqhd,bshd->bhqs", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
                   + jnp.einsum("bqhd,bsxd->bhqs", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))) * scale
         if cache is not None:
-            bias = jnp.where(kmask, 0.0, NEG_INF)[None, None, :, :]
+            bias = jnp.where(kmask, 0.0, NEG_INF)[:, None, :, :]
         else:
             q_pos = jnp.arange(Sq)
             bias = jnp.where(q_pos[:, None] >= jnp.arange(Sk)[None, :], 0.0, NEG_INF)[None, None]
@@ -464,6 +473,7 @@ def init_mla_cache(cfg, batch: int, seq_len: int, dtype=jnp.float32) -> Params:
         "c_kv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((batch, seq_len, 1, cfg.qk_rope_head_dim), dtype),
         "pos": jnp.zeros((), jnp.int32),
+        "slot_pos": jnp.full((batch, seq_len), -1, jnp.int32),
     }
 
 

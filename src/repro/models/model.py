@@ -207,11 +207,26 @@ def init_caches(cfg, batch: int, seq_len: int, dtype=None) -> Params:
 
 
 def decode_step(cfg, p: Params, tokens: jnp.ndarray, caches: Params, *,
-                backend: Optional[str] = None) -> Tuple[jnp.ndarray, Params]:
-    """One token per sequence: tokens (B,1) -> logits (B,1,vocab)."""
+                backend: Optional[str] = None, mesh=None,
+                pos_offset: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One token per sequence: tokens (B,1) -> logits (B,1,vocab).
+
+    ``mesh`` opts dense-family trunks into the plan-aware sited decode
+    path (explicit collectives at ``serve.layer{i}.*`` SiteIds, resolved
+    against the active tuned plan; other families ignore it).
+    ``pos_offset`` (B,) int32 subtracts a per-sequence gap from the shared
+    position counter — how the fixed-batch engine keeps right-padded
+    ragged prompts on their true positions (the pad gap sits between
+    prefill and decode slots, which the per-row ``slot_pos`` mask already
+    excludes)."""
     B = tokens.shape[0]
     t0 = caches["pos"]
     positions = _positions(cfg, {"tokens": tokens}, B, 1, t0)
+    if pos_offset is not None:
+        off = jnp.asarray(pos_offset, jnp.int32)
+        positions = positions - (off[None, :, None] if positions.ndim == 3
+                                 else off[:, None])
     x = L.embed(p["embed"], tokens)
 
     if cfg.family == "audio":
@@ -228,6 +243,8 @@ def decode_step(cfg, p: Params, tokens: jnp.ndarray, caches: Params, *,
         elif cfg.family == "hybrid":
             x, new_tc, _ = zamba2.trunk_fwd(p["trunk"], cfg, x, positions, caches["trunk"], **kw)
         else:
+            if mesh is not None:
+                kw["mesh"] = mesh
             x, new_tc, _ = dense.trunk_fwd(p["trunk"], cfg, x, positions, caches["trunk"], **kw)
         new_caches = {"trunk": new_tc, "pos": t0 + 1}
 

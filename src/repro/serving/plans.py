@@ -1,0 +1,119 @@
+"""Plan resolution and hot-swap state for the serving engines.
+
+Both engines carry a ``PlanBinding``: either a pinned ``TunedPlan``
+(``plan=``, hot-swappable between batches via ``set_plan``) or a
+``PlanRepository`` (``repo=``) that is re-resolved as the decode batch
+shape drifts under traffic — exact fingerprint first, then the tolerance
+band (``PlanRepository.resolve(band=...)``).
+
+Two mechanics matter here:
+
+* **Scoping** — a resolved plan is applied through the scoped
+  ``collectives.use_runtime_plan`` stack, never a process-global install,
+  so every exit path (normal or exceptional) restores the ambient plan
+  and two engines in one process can serve under different plans.
+* **Trace staleness** — plans are consumed at *trace* time, so a jitted
+  decode step keeps the plan it was traced under.  Engines key their
+  compiled-step caches on ``digest()``; a hot-swap lands on a different
+  key and retraces instead of silently reusing the old chunk structure.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Dict, Optional, Union
+
+from repro.core.apply import plan_digest
+from repro.core.extract import ParallelPlan, extract_decode_workload, parse_parallel
+from repro.core.plan_repo import as_repository
+from repro.core.session import TunedPlan
+from repro.parallel import collectives as C
+
+DEFAULT_BAND = 0.5
+
+
+class PlanBinding:
+    """Per-engine plan state; see module docstring.  ``parallel`` names the
+    deployed topology the decode workload is rebuilt with for repository
+    lookups (a ``ParallelPlan`` or a ``kind:degree`` spec string; degrees
+    of 1 still fingerprint, they just carry no comm sites)."""
+
+    def __init__(
+        self,
+        cfg,
+        *,
+        plan=None,
+        repo=None,
+        hardware: str = "tpu-v5e",
+        parallel: Union[ParallelPlan, str, None] = None,
+        band: float = DEFAULT_BAND,
+        max_seq: int = 0,
+    ):
+        self.cfg = cfg
+        self.hardware = hardware
+        self.band = band
+        self.max_seq = max_seq
+        if isinstance(parallel, str):
+            parallel = parse_parallel(parallel)
+        self.parallel = parallel or ParallelPlan(kind="tp", tp=1)
+        self.repo = as_repository(repo) if repo is not None else None
+        self.stats = {"exact": 0, "banded": 0, "miss": 0, "swaps": 0}
+        self._rt: Optional[Dict] = None
+        self._digest = None  # None = never set (the first swap is free)
+        if plan is not None:
+            self.set_plan(plan)
+
+    @property
+    def bound(self) -> bool:
+        """Whether this binding can ever produce a plan (pinned or repo)."""
+        return self._rt is not None or self.repo is not None
+
+    @property
+    def current(self) -> Optional[Dict]:
+        """The runtime plan decode is currently scoped under (``None`` =
+        inherit the ambient plan, i.e. untuned unless one is installed)."""
+        return self._rt
+
+    def set_plan(self, plan) -> None:
+        """Hot-swap the pinned plan: a ``TunedPlan``, a path to its JSON,
+        an already-lowered runtime dict, or ``None`` (unpin)."""
+        if isinstance(plan, (str, os.PathLike)):
+            plan = TunedPlan.load(plan)
+        rt = plan.runtime_plan() if isinstance(plan, TunedPlan) else plan
+        self._swap(rt)
+
+    def _swap(self, rt: Optional[Dict]) -> None:
+        d = plan_digest(rt) if rt is not None else ()
+        if self._digest is not None and d != self._digest:
+            self.stats["swaps"] += 1
+        self._digest = d
+        self._rt = rt
+
+    def resolve(self, batch_size: int) -> Optional[Dict]:
+        """The runtime plan for a batch of ``batch_size`` in-flight
+        sequences.  Repo-bound engines rebuild the decode workload at this
+        shape and re-resolve (exact > banded > miss, recorded in
+        ``stats``); pinned plans are returned as-is."""
+        if self.repo is None:
+            return self._rt
+        wl = extract_decode_workload(
+            self.cfg, self.parallel, global_batch=batch_size, seq=self.max_seq
+        )
+        plan, how = self.repo.resolve_explain(wl, self.hardware, band=self.band)
+        self.stats[how] += 1
+        self._swap(plan.runtime_plan() if plan is not None else None)
+        return self._rt
+
+    def scope(self, rt: Optional[Dict]):
+        """Context manager applying ``rt`` via the scoped plan stack
+        (no-op for ``None``: inherit the ambient plan)."""
+        if rt is None:
+            return contextlib.nullcontext()
+        return C.use_runtime_plan(rt)
+
+    def digest(self, rt: Optional[Dict]) -> tuple:
+        """Compiled-step cache key for ``rt``.  An unbound step inherits
+        the *ambient* plan at trace time, so its key must reflect that
+        plan too — a later process-global install must not reuse traces
+        made under the previous one."""
+        return plan_digest(rt if rt is not None else C.active_runtime_plan())

@@ -11,6 +11,7 @@ from repro.core import (
     ParallelPlan,
     PlanRepoError,
     PlanRepository,
+    extract_decode_workload,
     extract_workload,
     tune,
     workload_fingerprint,
@@ -150,16 +151,103 @@ def test_serve_launcher_resolves_repo_plan(tmp_path, capsys):
     from repro.launch import serve
 
     cfg = get_smoke_config("llama3-8b")
-    pp = ParallelPlan(kind="fsdp", dp=8)
-    wl = extract_workload(cfg, pp, seq=32, global_batch=2, decode=True)
+    pp = ParallelPlan(kind="tp", tp=2)
+    # the serving launcher resolves the decode-shape workload (serve.* sites)
+    wl = extract_decode_workload(cfg, pp, global_batch=2, seq=32)
     plan = tune(wl, "tpu-v5e", repo=str(tmp_path))
     argv = ["--arch", "llama3-8b", "--smoke", "--batch", "2"]
     argv += ["--prompt-len", "4", "--max-new", "2", "--max-seq", "32"]
-    argv += ["--plan-repo", str(tmp_path)]
+    argv += ["--plan-repo", str(tmp_path), "--plan-parallel", "tp:2"]
     serve.main(argv)
     out = capsys.readouterr().out
     assert "zero tuning at launch" in out
+    # one resolve per batch (generate + throughput probe), both exact
+    assert "2 exact, 0 banded, 0 miss" in out
     assert C.active_runtime_plan() == plan.runtime_plan(wl)
+    assert any(s.startswith("serve.layer") for s in plan.runtime_plan(wl))
+
+
+def test_serve_launcher_banded_repo_hit(tmp_path, capsys):
+    from repro.launch import serve
+
+    cfg = get_smoke_config("llama3-8b")
+    pp = ParallelPlan(kind="tp", tp=2)
+    wl = extract_decode_workload(cfg, pp, global_batch=4, seq=32)
+    tune(wl, "tpu-v5e", repo=str(tmp_path))
+    argv = ["--arch", "llama3-8b", "--smoke", "--batch", "6"]
+    argv += ["--prompt-len", "4", "--max-new", "2", "--max-seq", "32"]
+    argv += ["--plan-repo", str(tmp_path), "--plan-parallel", "tp:2"]
+    argv += ["--plan-band", "0.5"]
+    serve.main(argv)
+    out = capsys.readouterr().out
+    assert "banded hit" in out
+    assert "0 exact, 2 banded, 0 miss" in out
+
+
+# ---------------------------------------------------------------------------
+# tolerance-band resolution: same structure modulo (seq, batch), nearest wins
+# ---------------------------------------------------------------------------
+
+
+def _decode_wl(arch="llama3-8b", kind="tp", degree=2, batch=4, seq=32):
+    cfg = get_smoke_config(arch)
+    kw = {"tp": degree} if kind == "tp" else {"ep": degree}
+    pp = ParallelPlan(kind=kind, **kw)
+    return extract_decode_workload(cfg, pp, global_batch=batch, seq=seq)
+
+
+def test_banded_resolve_hits_nearby_shape(tmp_path):
+    repo = PlanRepository(tmp_path)
+    plan = tune(_decode_wl(batch=4), "tpu-v5e", method="nccl", repo=repo)
+    want = _decode_wl(batch=6)  # 6/4 - 1 = 0.5: inside band 0.5
+    # band=0.0 default preserves the exact-only pre-band behavior
+    assert repo.resolve(want, "tpu-v5e") is None
+    got, how = repo.resolve_explain(want, "tpu-v5e", band=0.5)
+    assert how == "banded" and got == plan
+    # out of band: miss
+    far = _decode_wl(batch=32)
+    assert repo.resolve_explain(far, "tpu-v5e", band=0.5) == (None, "miss")
+    # exact hit stays exact even with a band
+    got, how = repo.resolve_explain(_decode_wl(batch=4), "tpu-v5e", band=0.5)
+    assert how == "exact"
+
+
+def test_banded_resolve_nearest_shape_wins(tmp_path):
+    repo = PlanRepository(tmp_path)
+    near = tune(_decode_wl(batch=4), "tpu-v5e", method="nccl", repo=repo)
+    far = tune(_decode_wl(batch=8), "tpu-v5e", method="nccl", repo=repo)
+    got, how = repo.resolve_explain(_decode_wl(batch=5), "tpu-v5e", band=0.6)
+    assert how == "banded" and got == near
+    got, how = repo.resolve_explain(_decode_wl(batch=7), "tpu-v5e", band=0.6)
+    assert how == "banded" and got == far
+
+
+def test_banded_resolve_refuses_structural_mismatch(tmp_path):
+    repo = PlanRepository(tmp_path)
+    moe = _decode_wl("olmoe-1b-7b", kind="ep", batch=4)
+    tune(moe, "tpu-v5e", method="nccl", repo=repo)
+    # a dense workload must never borrow the MoE plan, however wide the band
+    dense = _decode_wl("llama3-8b", batch=4)
+    assert repo.resolve_explain(dense, "tpu-v5e", band=100.0) == (None, "miss")
+    # seq deviation is banded too, not just batch
+    long_seq = _decode_wl("olmoe-1b-7b", kind="ep", batch=4, seq=256)
+    assert repo.resolve_explain(long_seq, "tpu-v5e", band=0.5)[1] == "miss"
+    near_seq = _decode_wl("olmoe-1b-7b", kind="ep", batch=4, seq=40)
+    assert repo.resolve_explain(near_seq, "tpu-v5e", band=0.5)[1] == "banded"
+
+
+def test_banded_resolve_reverifies_provenance(tmp_path):
+    repo = PlanRepository(tmp_path)
+    plan = tune(_decode_wl(batch=4), "tpu-v5e", method="nccl", repo=repo)
+    path = repo.path_for(plan.fingerprint, "tpu-v5e")
+    with open(path) as f:
+        doc = json.load(f)
+    doc["fingerprint"] = "0" * 64
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    # the banded scan get()s each candidate, so tampering surfaces there too
+    with pytest.raises(PlanRepoError, match="misfiled/tampered"):
+        repo.resolve_explain(_decode_wl(batch=6), "tpu-v5e", band=0.5)
 
 
 def test_parse_parallel_specs():

@@ -1,0 +1,305 @@
+"""Plan-aware serving: sited ``serve.layer{i}.*`` decode collectives, the
+engines' plan surface (pinned plan hot-swap + repository tolerance-band
+re-resolution), the fixed-batch engine's ragged-prompt correctness, and the
+``make_engine`` factory/registry."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import ParallelPlan, extract_decode_workload, tune
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.parallel import collectives as C
+from repro.serving import Request, available_engines, make_engine, make_serve_step
+
+CFG = get_smoke_config("llama3-8b")  # 2 dense layers
+MOE_CFG = get_smoke_config("olmoe-1b-7b")  # 2 MoE layers
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan_state():
+    yield
+    C.install_runtime_plan({})
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe_params():
+    return M.init_params(MOE_CFG, jax.random.PRNGKey(1))
+
+
+def _prompts(n, rng_seed=0, lo=4, hi=9):
+    rs = np.random.default_rng(rng_seed)
+    sizes = [int(rs.integers(lo, hi)) for _ in range(n)]
+    return [rs.integers(0, CFG.vocab_size, size=s).astype(np.int32) for s in sizes]
+
+
+def _moe_prompt(rs, size=6):
+    return rs.integers(0, MOE_CFG.vocab_size, size=size).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# serve.* site resolution precedence: exact > dotted prefix > class
+# ---------------------------------------------------------------------------
+
+
+def test_serve_site_precedence():
+    exact = C.CollectiveRuntime("ring", 8)
+    prefix = C.CollectiveRuntime("ring", 4)
+    klass = C.CollectiveRuntime("chunked", 2)
+    plan = {"serve.layer0.mlp.ag": exact, "serve.layer0": prefix, "ag": klass}
+    with C.use_runtime_plan(plan):
+        rt, src = C.explain_runtime("serve.layer0.mlp.ag", "ag")
+        assert (rt, src) == (exact, "serve.layer0.mlp.ag")
+        # sibling site in the same layer: falls to the layer prefix
+        rt, src = C.explain_runtime("serve.layer0.mlp.rs", "rs")
+        assert (rt, src) == (prefix, "serve.layer0")
+        # other layer, no prefix entry: class bucket
+        rt, src = C.explain_runtime("serve.layer1.mlp.ag", "ag")
+        assert (rt, src) == (klass, "ag")
+        # nothing matches: XLA default
+        rt, src = C.explain_runtime("serve.layer1.mlp.rs", None)
+        assert src == "" and rt.num_chunks == 1
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one plan drives two decode layers to different chunk structure
+# ---------------------------------------------------------------------------
+
+
+def test_one_plan_two_layers_diverge_in_jaxpr(params):
+    mesh = make_mesh((jax.device_count(),), ("model",))
+    caches = M.init_caches(CFG, 4, 32)
+    toks = jnp.zeros((4, 1), jnp.int32)
+
+    def trace(plan):
+        # a FRESH closure per trace: jax caches traces per function object,
+        # and plans are consumed at trace time (the staleness hazard the
+        # engines' per-digest compiled caches exist for)
+        step = make_serve_step(CFG, mesh=mesh)
+        if plan is None:
+            return str(jax.make_jaxpr(step)(params, toks, caches))
+        with C.use_runtime_plan(plan):
+            return str(jax.make_jaxpr(step)(params, toks, caches))
+
+    plan = {
+        "serve.layer0.mlp.ag": C.CollectiveRuntime("ring", 2),
+        "serve.layer1.mlp.ag": C.CollectiveRuntime("ring", 4),
+    }
+    uni = {
+        "serve.layer0.mlp.ag": C.CollectiveRuntime("ring", 2),
+        "serve.layer1.mlp.ag": C.CollectiveRuntime("ring", 2),
+    }
+    tuned, plain, uniform = trace(plan), trace(None), trace(uni)
+    assert tuned != plain
+    # chunked ag emits one lax.map scan per chunked matmul (2 ag per swiglu
+    # layer); both tuned layers chunk, the plain trace has none
+    assert tuned.count("scan[") == plain.count("scan[") + 4
+    # nc=2 vs nc=4 on layer1 is visible structure, not just knob metadata
+    assert tuned != uniform
+
+    # the SAME function object re-traced under a new plan is a cache hit —
+    # the documented reason engines key compiled steps on the plan digest
+    step = make_serve_step(CFG, mesh=mesh)
+    with C.use_runtime_plan(plan):
+        first = str(jax.make_jaxpr(step)(params, toks, caches))
+    stale = str(jax.make_jaxpr(step)(params, toks, caches))
+    assert first == stale
+
+
+# ---------------------------------------------------------------------------
+# fixed-batch engine: ragged right-padded prompts decode correctly
+# ---------------------------------------------------------------------------
+
+
+def test_engine_ragged_prompts_match_solo_runs(params):
+    short = np.asarray([7, 11, 13], np.int32)
+    long = np.asarray([5, 3, 2, 19, 23, 29, 31], np.int32)
+    eng = make_engine(CFG, params, mode="fixed", batch_size=2, max_seq=32)
+    outs = eng.generate([short, long], max_new=6)
+    solo = make_engine(CFG, params, mode="fixed", batch_size=1, max_seq=32)
+    assert outs[0] == solo.generate([short], max_new=6)[0]
+    assert outs[1] == solo.generate([long], max_new=6)[0]
+
+
+def test_engine_equal_length_unchanged(params):
+    # the pre-fix path (no padding) must be bit-identical to itself under
+    # the offset machinery: offsets are all zero for equal lengths
+    prompts = _prompts(2, lo=6, hi=7)
+    eng = make_engine(CFG, params, mode="fixed", batch_size=2, max_seq=32)
+    assert eng.generate(prompts, max_new=4) == eng.generate(prompts, max_new=4)
+
+
+# ---------------------------------------------------------------------------
+# hot-swap: plans scope per batch and restore on every exit path
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_engine_plan_scoped_and_restored(params):
+    plan = {
+        "serve.layer0.mlp.ag": C.CollectiveRuntime("ring", 2),
+        "serve.layer1.mlp.ag": C.CollectiveRuntime("ring", 4),
+    }
+    prompts = _prompts(4, lo=8, hi=9)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # no unchunked/fallback warnings
+        base = make_engine(CFG, params, mode="fixed", batch_size=4, max_seq=32)
+        want = base.generate(prompts, max_new=4)
+        eng = make_engine(
+            CFG, params, mode="fixed", batch_size=4, max_seq=32, plan=plan
+        )
+        got = eng.generate(prompts, max_new=4)
+    assert got == want  # chunking is numerically identity
+    assert C.active_runtime_plan() == {}  # scoped, not installed
+
+    # exception inside the scoped region must restore the ambient plan too
+    binding = eng._binding
+    with pytest.raises(RuntimeError, match="boom"):
+        with binding.scope(binding.current):
+            assert C.active_runtime_plan() == plan
+            raise RuntimeError("boom")
+    assert C.active_runtime_plan() == {}
+
+
+def test_continuous_engine_hot_swap_between_batches(moe_params):
+    plan = {
+        "serve.layer0.moe.a2a_disp": C.CollectiveRuntime("chunked", 2),
+        "serve.layer1.moe.a2a_comb": C.CollectiveRuntime("chunked", 4),
+    }
+
+    def run_batch(eng, seed):
+        rs = np.random.default_rng(seed)
+        for i in range(3):
+            eng.submit(Request(rid=i, prompt=_moe_prompt(rs), max_new=4))
+        return [r.out for r in sorted(eng.run(), key=lambda r: r.rid)]
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        base = make_engine(MOE_CFG, moe_params, mode="continuous", slots=2, max_seq=32)
+        want1, want2 = run_batch(base, 1), run_batch(base, 2)
+        eng = make_engine(
+            MOE_CFG, moe_params, mode="continuous", slots=2, max_seq=32, plan=plan
+        )
+        got1 = run_batch(eng, 1)  # tuned batch
+        eng.set_plan(None)  # hot-swap to untuned between batches
+        got2 = run_batch(eng, 2)
+    assert got1 == want1 and got2 == want2  # bit-identical tokens
+    assert eng.plan_stats["swaps"] == 1
+    assert len(eng._fns) == 2  # retraced per digest, not reused
+    assert C.active_runtime_plan() == {}
+
+
+# ---------------------------------------------------------------------------
+# repository binding: banded resolution as the serving shape drifts
+# ---------------------------------------------------------------------------
+
+
+def test_engine_repo_banded_resolution(params, tmp_path):
+    pp = ParallelPlan(kind="tp", tp=2)
+    wl = extract_decode_workload(CFG, pp, global_batch=4, seq=32)
+    tune(wl, "tpu-v5e", method="nccl", repo=str(tmp_path))
+    prompts = _prompts(6, lo=8, hi=9)
+
+    eng = make_engine(
+        CFG,
+        params,
+        mode="fixed",
+        batch_size=6,
+        max_seq=32,
+        repo=str(tmp_path),
+        plan_parallel="tp:2",
+        plan_band=0.5,
+    )
+    eng.generate(prompts, max_new=2)
+    assert eng.plan_stats["banded"] == 1 and eng.plan_stats["miss"] == 0
+    assert any(s.startswith("serve.") for s in eng._binding.current)
+
+    exact = make_engine(
+        CFG,
+        params,
+        mode="fixed",
+        batch_size=4,
+        max_seq=32,
+        repo=str(tmp_path),
+        plan_parallel="tp:2",
+        plan_band=0.5,
+    )
+    exact.generate(prompts[:4], max_new=2)
+    assert exact.plan_stats["exact"] == 1
+
+    narrow = make_engine(
+        CFG,
+        params,
+        mode="fixed",
+        batch_size=6,
+        max_seq=32,
+        repo=str(tmp_path),
+        plan_parallel="tp:2",
+        plan_band=0.1,
+    )
+    narrow.generate(prompts, max_new=2)
+    assert narrow.plan_stats["miss"] == 1
+    assert narrow._binding.current is None  # miss serves untuned
+
+
+def test_continuous_engine_readmits_resolve_on_shape_drift(moe_params, tmp_path):
+    pp = ParallelPlan(kind="ep", ep=2)
+    wl = extract_decode_workload(MOE_CFG, pp, global_batch=3, seq=32)
+    tune(wl, "tpu-v5e", method="nccl", repo=str(tmp_path))
+    eng = make_engine(
+        MOE_CFG,
+        moe_params,
+        mode="continuous",
+        slots=3,
+        max_seq=32,
+        repo=str(tmp_path),
+        plan_parallel="ep:2",
+        plan_band=0.5,
+    )
+    rs = np.random.default_rng(0)
+    # 2 requests in flight first (banded: tuned shape is batch 3,
+    # 3/2 - 1 = 0.5 within band), then 3 (exact)
+    for rid in range(2):
+        eng.submit(Request(rid=rid, prompt=_moe_prompt(rs, 5), max_new=2))
+    eng.run()
+    for rid in range(2, 5):
+        eng.submit(Request(rid=rid, prompt=_moe_prompt(rs, 5), max_new=2))
+    eng.run()
+    stats = eng.plan_stats
+    assert stats["banded"] >= 1 and stats["exact"] >= 1 and stats["miss"] == 0
+
+
+# ---------------------------------------------------------------------------
+# make_engine factory + unified Request
+# ---------------------------------------------------------------------------
+
+
+def test_make_engine_modes(params):
+    from repro.serving.continuous import ContinuousEngine
+    from repro.serving.engine import Engine
+
+    assert available_engines() == ["continuous", "fixed"]
+    e = make_engine(CFG, params, mode="fixed", batch_size=2, max_seq=32)
+    assert isinstance(e, Engine)
+    c = make_engine(CFG, params, mode="continuous", slots=2, max_seq=32)
+    assert isinstance(c, ContinuousEngine)
+    with pytest.raises(KeyError, match="unknown engine mode 'nope'"):
+        make_engine(CFG, params, mode="nope")
+
+
+def test_request_is_one_class():
+    import repro.serving.continuous as cont
+    import repro.serving.engine as eng
+    from repro.serving.types import Request as R
+
+    assert eng.Request is R and cont.Request is R and Request is R
+    r = Request(rid=3, prompt=np.asarray([1, 2], np.int32), max_new=5)
+    assert (r.rid, r.max_new, r.out) == (3, 5, [])
