@@ -1,0 +1,85 @@
+"""Fault-aware plan lifecycle, end to end: tune nominal and robust plans
+under a degraded-link ensemble, then serve while the link actually
+degrades mid-run — the health monitor detects the per-site drift within
+its window and the engine demotes the affected ``serve.*`` sites to
+fallback knobs without dropping a single token.
+
+    PYTHONPATH=src python examples/fault_injection.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import ParallelPlan, extract_decode_workload, tune
+from repro.core.faults import FaultEvent, FaultSchedule
+from repro.models import model as M
+from repro.serving import make_engine
+
+cfg = get_smoke_config("llama3-8b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+# 1. tune the decode shape twice: a nominal plan, and a minimax-regret
+#    robust plan over an ensemble of plausible degradation scenarios
+pp = ParallelPlan(kind="tp", tp=2)
+wl = extract_decode_workload(cfg, pp, global_batch=32, seq=128)
+nominal = tune(wl, "tpu-v5e", method="lagom")
+robust = tune(
+    wl,
+    "tpu-v5e",
+    method="lagom",
+    fault_ensemble=["degrade,scale=0.25", "degrade,site=ag,scale=0.1"],
+)
+meta = robust.faults
+print(
+    f"robust tuning picked {meta['selected']!r} "
+    f"(worst-case regret {meta['worst_case_regret']:.3e}s, "
+    f"{meta['total_profiles']} total profiles); nominal regret "
+    f"{meta['regrets']['nominal']:.3e}s"
+)
+
+# 2. serve under the nominal plan while the fabric degrades at batch 2:
+#    serve.* links drop to 10% bandwidth, the kind of silent brownout a
+#    healthy-hardware plan cannot see coming
+schedule = FaultSchedule(
+    events=(FaultEvent("degrade", site="serve", scale=0.1, start=2),)
+)
+engine = make_engine(
+    cfg,
+    params,
+    mode="fixed",
+    batch_size=32,
+    max_seq=128,
+    plan=nominal,
+    fault_schedule=schedule,
+    health_window=2,
+    health_tolerance=0.25,
+)
+
+rs = np.random.default_rng(0)
+prompts = [
+    rs.integers(0, cfg.vocab_size, size=8).astype(np.int32) for _ in range(32)
+]
+outs = engine.generate(prompts, max_new=8)
+assert all(len(o) == 8 for o in outs), "generation must complete under faults"
+print("served 32 requests x 8 tokens through the degradation window")
+
+# 3. the structured degradation log: drift detected within the window,
+#    then one transactional demotion of every affected serve.* site
+for event in engine.health_events:
+    print(f"  {event}")
+demotions = [e for e in engine.health_events if e["event"] == "demotion"]
+assert demotions and not demotions[0]["rolled_back"], engine.health_events
+assert all(s.startswith("serve.") for s in demotions[0]["sites"])
+print(engine.health_report())
+
+# 4. how would each plan have fared on the degraded fabric?  Evaluate both
+#    under the same scripted fault (open-ended, so every step is degraded)
+fault = "degrade,site=serve,scale=0.1"
+rows = [
+    ("nominal", nominal.evaluate(wl).Z, nominal.evaluate(wl, faults=fault).Z),
+    ("robust", robust.evaluate(wl).Z, robust.evaluate(wl, faults=fault).Z),
+]
+print("\nplan      healthy Z     degraded Z")
+for name, healthy, degraded in rows:
+    print(f"{name:8s}  {healthy:.4e}s  {degraded:.4e}s")
+assert rows[1][2] <= rows[0][2] * 1.001, "robust plan must not lose degraded"

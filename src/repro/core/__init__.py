@@ -6,6 +6,8 @@
   contention  — Eqs. 4–6 + communication-time model
   cost_model  — Eqs. 1–3 closed form
   simulator   — event-driven ProfileTime oracle
+  faults      — scripted fault schedules (degraded links, stragglers,
+                jitter bursts, flaps) injected into the oracle
   profiling   — batched/vectorized ProfileTime engine + caches
   scheduler   — cross-group interleaved tuning (resumable step machines)
   priority    — metric H (Eq. 7)
@@ -22,6 +24,8 @@
 from repro.core.comm_params import CommConfig, min_config, vendor_default
 from repro.core.extract import (ParallelPlan, extract_decode_workload,
                                 extract_workload, parse_parallel)
+from repro.core.faults import (FaultEvent, FaultSchedule,
+                               parse_fault_schedule)
 from repro.core.hardware import A40_NVLINK, A40_PCIE, PROFILES, TPU_V5E, Hardware
 from repro.core.plan_repo import PlanRepoError, PlanRepository
 from repro.core.session import (PlanMismatchError, SearchBackend,
@@ -37,6 +41,7 @@ __all__ = [
     "parse_parallel",
     "Hardware", "A40_PCIE", "A40_NVLINK", "TPU_V5E", "PROFILES",
     "Simulator", "Measurement",
+    "FaultEvent", "FaultSchedule", "parse_fault_schedule",
     "CompOp", "CommOp", "OverlapGroup", "Workload",
     "tune", "TunedPlan", "PlanMismatchError", "SearchBackend",
     "SearchOutcome", "register_backend", "available_methods",

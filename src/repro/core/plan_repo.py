@@ -19,12 +19,17 @@ installing configs tuned for a different structure.
 serving fleet's decode batch drifts under traffic, so an exact-shape miss
 that is a structural hit (same ``session.structure_fingerprint``) at a
 nearby (seq, global_batch) resolves to the nearest tuned shape instead of
-launching untuned.  Provenance is still verified entry by entry.
+launching untuned.  Provenance is still verified entry by entry — but a
+corrupt/misfiled *neighbor* found mid-scan is quarantined to
+``<name>.corrupt`` and skipped with a ``RuntimeWarning`` instead of
+aborting the lookup; only the direct ``get`` of an entry you explicitly
+asked for stays strict.
 """
 from __future__ import annotations
 
 import math
 import os
+import warnings
 from typing import Iterable, List, Optional, Tuple, Union
 
 from repro.core.hardware import Hardware
@@ -155,11 +160,24 @@ class PlanRepository:
         want_shape = workload_shape(wl)
         best: Optional[TunedPlan] = None
         best_d = math.inf
-        for efp, ehw, _path in self.entries():
+        for efp, ehw, path in self.entries():
             if ehw != hw or efp == fp:
                 continue
-            cand = self.get(efp, ehw)    # provenance re-verified; a
-            if cand is None:             # tampered entry raises, not hides
+            try:
+                cand = self.get(efp, ehw)   # provenance re-verified
+            except PlanRepoError as e:
+                # one bad neighbor must not abort the whole banded scan:
+                # quarantine it (``.corrupt`` drops it from ``entries()``)
+                # and keep looking.  Direct ``get`` stays strict — only
+                # the opportunistic scan degrades gracefully.
+                quarantined = f"{path}.corrupt"
+                os.replace(path, quarantined)
+                warnings.warn(
+                    f"skipping corrupt plan repository entry during banded "
+                    f"resolve: {e}; quarantined to {quarantined}",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            if cand is None:
                 continue
             if not cand.structure or cand.structure != want_struct:
                 continue

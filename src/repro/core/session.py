@@ -50,6 +50,7 @@ from dataclasses import dataclass, field, fields
 from typing import Callable, Dict, List, Optional, Protocol, Union, runtime_checkable
 
 from repro.core.comm_params import CommConfig
+from repro.core.faults import FaultSchedule, parse_fault_schedule
 from repro.core.hardware import PROFILES, Hardware
 from repro.core.scheduler import MODES, resolve_mode
 from repro.core.simulator import Measurement, Simulator
@@ -261,6 +262,10 @@ class TunedPlan:
     # was tuned at — what tolerance-band repository resolution matches on.
     structure: str = ""
     shape: Dict = field(default_factory=dict)
+    # fault provenance (empty for nominal plans; default keeps pre-fault
+    # plan files loading): the schedule a plan was tuned under, or — for
+    # robust plans — the ensemble, per-candidate regrets and the winner.
+    faults: Dict = field(default_factory=dict)
     version: int = PLAN_VERSION
 
     # -- structural guard --------------------------------------------------
@@ -365,11 +370,18 @@ class TunedPlan:
                 "evaluate/compare") from None
 
     def evaluate(self, wl: Workload, *, sim: Optional[Simulator] = None,
-                 ) -> Measurement:
+                 faults=None) -> Measurement:
         """Profile the plan's configs on its workload (fingerprint-checked).
         Defaults to a fresh deterministic simulator on the plan's hardware
         profile so evaluations are stable; pass ``sim=`` to evaluate under
-        jitter or on shared RNG state."""
+        jitter or on shared RNG state, or ``faults=`` (a ``FaultSchedule``,
+        inline spec, or schedule-file path) to evaluate under a scripted
+        fault — the fresh simulator's fault clock starts at step 0."""
+        if faults is not None:
+            if sim is not None:
+                raise ValueError("sim= carries its own fault schedule; "
+                                 "pass faults= or sim=, not both")
+            sim = Simulator(self._hw(), faults=parse_fault_schedule(faults))
         self.check(wl)
         sim = sim or Simulator(self._hw())
         return sim.profile(wl, self.configs)
@@ -443,11 +455,115 @@ def _lookup_hw(hardware: Union[Hardware, str]) -> Hardware:
 # the front door
 # ---------------------------------------------------------------------------
 
+def _search_to_plan(backend, method: str, mode: str, sim: Simulator,
+                    workload: Workload, options: Dict,
+                    faults_meta: Optional[Dict] = None) -> TunedPlan:
+    """One search on ``sim`` lowered to a ``TunedPlan`` (the shared tail of
+    nominal, faulted and robust tuning)."""
+    resolved = resolve_mode(sim, mode)
+    outcome = backend.search(sim, workload, mode=resolved, **options)
+    stats = (sim.engine.cache_stats()
+             if sim.batched and sim._engine is not None else None)
+    return TunedPlan(
+        method=method, mode=resolved, hardware=sim.hw.name,
+        workload=workload.name, fingerprint=workload_fingerprint(workload),
+        seed=sim.seed, noise=sim.noise, noise_mode=sim.noise_mode,
+        configs=dict(outcome.configs), sites=comm_site_meta(workload),
+        profile_count=outcome.profile_count, traces=list(outcome.traces),
+        cache_stats=stats, structure=structure_fingerprint(workload),
+        shape=workload_shape(workload), faults=dict(faults_meta or {}))
+
+
+def _scenario_states(sched: Optional[FaultSchedule]) -> List:
+    """The distinct fault windows a scenario can present — ``None`` (the
+    healthy window) plus every unique active state over the schedule's
+    horizon.  Worst-case scoring over these captures transient events
+    (flaps, late-start degradations) that a single step-0 probe would
+    miss."""
+    states = [None]
+    if sched is None:
+        return states
+    horizon = 1
+    for ev in sched.events:
+        horizon = max(horizon,
+                      ev.stop if ev.stop is not None
+                      else ev.start + max(1, ev.period))
+    seen = set()
+    for step in range(horizon):
+        st = sched.state_at(step)
+        if st is None:
+            continue
+        key = (st.comp_scale, st.sigma, st.comm_events)
+        if key not in seen:
+            seen.add(key)
+            states.append(st)
+    return states
+
+
+def _robust_tune(backend, method: str, mode: str, workload: Workload,
+                 hw: Hardware, sim_kw: Dict, ensemble: List[FaultSchedule],
+                 options: Dict) -> TunedPlan:
+    """Minimax-regret tuning over a fault ensemble: tune one candidate per
+    scenario (nominal + each schedule), score every candidate's worst-case
+    makespan under every scenario's fault windows, and keep the candidate
+    whose worst regret vs the per-scenario best is smallest (ties break
+    toward better nominal time).  The winner's ``faults`` provenance
+    records the ensemble, the per-candidate regrets and the total search
+    cost; its own ``profile_count`` stays its search cost."""
+    scenarios: List[Optional[FaultSchedule]] = [None] + list(ensemble)
+    labels = ["nominal"] + [f"robust[{i}]" for i in range(len(ensemble))]
+    candidates: List[TunedPlan] = []
+    for sched in scenarios:
+        sim = Simulator(hw, faults=sched, **sim_kw)
+        candidates.append(
+            _search_to_plan(backend, method, mode, sim, workload, options))
+
+    # score on the scalar reference path with an explicit fault window, so
+    # every candidate sees each scenario's exact degraded physics
+    eval_sim = Simulator(hw, batched=False)
+    eval_profiles = 0
+
+    def worst_z(plan: TunedPlan, sched: Optional[FaultSchedule]) -> float:
+        nonlocal eval_profiles
+        worst = 0.0
+        for st in _scenario_states(sched):
+            z = 0.0
+            for gi, g in enumerate(workload.groups):
+                cfgs = [plan.configs[(gi, ci)] for ci in range(len(g.comms))]
+                z += eval_sim.run_group(g, cfgs, fstate=st).Z
+            eval_profiles += 1
+            worst = max(worst, z)
+        return worst
+
+    z_table = [[worst_z(c, sched) for sched in scenarios]
+               for c in candidates]
+    best = [min(z_table[c][s] for c in range(len(candidates)))
+            for s in range(len(scenarios))]
+    regrets = [max(z_table[c][s] - best[s] for s in range(len(scenarios)))
+               for c in range(len(candidates))]
+    win = min(range(len(candidates)),
+              key=lambda c: (regrets[c], z_table[c][0]))
+
+    plan = candidates[win]
+    plan.faults = {
+        "robust": True,
+        "ensemble": [s.to_dict() for s in ensemble],
+        "selected": labels[win],
+        "worst_case_regret": regrets[win],
+        "regrets": dict(zip(labels, regrets)),
+        "nominal_z": z_table[win][0],
+        "total_profiles": sum(c.profile_count for c in candidates)
+        + eval_profiles,
+    }
+    return plan
+
+
 def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
          method: str = "lagom", mode: str = "interleaved",
          noise: float = 0.0, noise_mode: str = "default", seed: int = 0,
          batched: bool = True, simulator: Optional[Simulator] = None,
-         repo=None, **options) -> TunedPlan:
+         repo=None, faults=None, fault_ensemble=None,
+         **options) -> TunedPlan:
     """Tune ``workload``'s collectives for ``hardware`` and return the
     result as a portable ``TunedPlan``.
 
@@ -463,10 +579,33 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
     otherwise, so that is rejected).  ``repo`` (a directory path or
     ``plan_repo.PlanRepository``) auto-``put``s the tuned plan under its
     (fingerprint, hardware) key so later launches with ``--plan-repo``
-    resolve it with zero tuning work.  Remaining keyword ``options`` go to
-    the backend (e.g. Lagom's ``warm_start``)."""
+    resolve it with zero tuning work.
+
+    Fault-aware tuning (``core.faults``): ``faults=`` (a ``FaultSchedule``,
+    inline spec, or schedule-file path) injects scripted degradation into
+    the search's ProfileTime draws and records the schedule as plan
+    provenance — an empty schedule is a no-op and results stay
+    byte-identical to the fault-free call.  ``fault_ensemble=`` (a list of
+    schedules/specs) instead runs minimax-regret robust tuning: one
+    candidate per scenario (nominal first), scored by worst-case makespan
+    across all scenarios' fault windows; the returned plan carries the
+    ensemble, regrets and total search cost in ``plan.faults``.  Both
+    build their own simulators, so they reject ``simulator=``.
+
+    Remaining keyword ``options`` go to the backend (e.g. Lagom's
+    ``warm_start``)."""
     backend = get_backend(method)
+    faults = parse_fault_schedule(faults)
+    if not faults:
+        faults = None            # empty schedule == fault-free tuning
+    if faults is not None and fault_ensemble is not None:
+        raise ValueError("pass faults= (tune under one schedule) or "
+                         "fault_ensemble= (robust minimax tuning), not both")
     if simulator is not None:
+        if faults is not None or fault_ensemble is not None:
+            raise ValueError(
+                "faults=/fault_ensemble= build their own simulators; drop "
+                "simulator= (or construct Simulator(faults=...) yourself)")
         sim = simulator
         if hardware is not None:
             hw = _lookup_hw(hardware)
@@ -482,23 +621,26 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
         if hardware is None:
             raise ValueError("pass hardware= (profile or name) or simulator=")
         hw = _lookup_hw(hardware)
-        sim = Simulator(hw, noise=noise, seed=seed, noise_mode=noise_mode,
-                        batched=batched)
+        sim_kw = dict(noise=noise, seed=seed, noise_mode=noise_mode,
+                      batched=batched)
+        if fault_ensemble is not None:
+            ensemble = [parse_fault_schedule(f) for f in fault_ensemble]
+            ensemble = [e for e in ensemble if e]
+            if not ensemble:
+                raise ValueError("fault_ensemble has no non-empty schedules")
+            plan = _robust_tune(backend, method, mode, workload, hw, sim_kw,
+                                ensemble, options)
+            if repo is not None:
+                from repro.core.plan_repo import as_repository
+                as_repository(repo).put(plan)
+            return plan
+        sim = Simulator(hw, faults=faults, **sim_kw)
     # validate here, not just in the built-in backends, so mode errors and
     # the shared-soundness rejection are uniform across every method
     # (nccl, third-party backends included)
-    mode = resolve_mode(sim, mode)
-    outcome = backend.search(sim, workload, mode=mode, **options)
-    stats = (sim.engine.cache_stats()
-             if sim.batched and sim._engine is not None else None)
-    plan = TunedPlan(
-        method=method, mode=mode, hardware=sim.hw.name,
-        workload=workload.name, fingerprint=workload_fingerprint(workload),
-        seed=sim.seed, noise=sim.noise, noise_mode=sim.noise_mode,
-        configs=dict(outcome.configs), sites=comm_site_meta(workload),
-        profile_count=outcome.profile_count, traces=list(outcome.traces),
-        cache_stats=stats, structure=structure_fingerprint(workload),
-        shape=workload_shape(workload))
+    faults_meta = {"schedule": faults.to_dict()} if faults is not None else {}
+    plan = _search_to_plan(backend, method, mode, sim, workload, options,
+                           faults_meta)
     if repo is not None:
         from repro.core.plan_repo import as_repository
         as_repository(repo).put(plan)

@@ -17,6 +17,17 @@ selects the ticket policy — ``"default"`` (independent draws in flat
 submission order) or ``"crn"`` (common random numbers keyed on the group's
 structural fingerprint, which makes trajectory sharing sound under
 jitter); see the ``core.noise`` module docstring for the full contract.
+
+``faults=`` attaches a scripted :class:`~repro.core.faults.FaultSchedule`:
+each logical ProfileTime invocation advances the fault clock by one step
+(``profile_many`` counts one step per candidate, in flat submission order,
+so the clock agrees with a loop of ``profile_group`` calls), and any
+active fault window reshapes that step's draws — degraded link hardware
+for matching comm sites, a duration multiplier on comps, and an extra
+deterministic jitter burst.  Faulted steps run on the scalar reference
+path (bypassing the engine's structural caches, which are keyed on
+healthy hardware); an empty schedule is normalized away entirely, so the
+fault-free path — and its results — are byte-identical to ``faults=None``.
 """
 from __future__ import annotations
 
@@ -27,6 +38,7 @@ from typing import List, Tuple
 
 from repro.core import contention as C
 from repro.core.comm_params import CommConfig
+from repro.core.faults import FaultSchedule, FaultState
 from repro.core.hardware import Hardware
 from repro.core.noise import NOISE_MODES, NoiseModel
 from repro.core.workload import ConfigSet, OverlapGroup, Workload
@@ -66,7 +78,7 @@ class Simulator:
 
     def __init__(self, hw: Hardware, *, noise: float = 0.0, seed: int = 0,
                  noise_mode: str = "default", batched: bool = True,
-                 cache_size: int = 131072):
+                 cache_size: int = 131072, faults: FaultSchedule = None):
         # eager argument validation: a bad seed or noise level otherwise
         # only surfaces as an opaque Philox/Box-Muller failure (or silent
         # NaN measurements) deep inside the first noisy profile call
@@ -81,6 +93,9 @@ class Simulator:
             raise ValueError(
                 "noise must be a finite non-negative lognormal sigma, got "
                 f"{noise!r}")
+        if faults is not None and not isinstance(faults, FaultSchedule):
+            raise ValueError(
+                f"faults must be a FaultSchedule, got {type(faults).__name__}")
         self.hw = hw
         self.noise = noise
         self.seed = seed
@@ -90,6 +105,8 @@ class Simulator:
         self.batched = batched
         self._cache_size = cache_size
         self._engine = None
+        # empty schedule -> None: the fault-free path is left untouched
+        self.faults = faults if faults else None
 
     @property
     def can_share_trajectories(self) -> bool:
@@ -97,8 +114,10 @@ class Simulator:
         search trajectories, i.e. measurements are pure functions of
         (structure, configs, trajectory position): true noise-free and in
         CRN mode (fingerprint-keyed draws) — the soundness condition for
-        ``scheduler.run_shared``."""
-        return not self.noise or self.noise_mode == "crn"
+        ``scheduler.run_shared``.  A fault schedule breaks purity a second
+        way: measurements then also depend on the global fault clock."""
+        return (not self.noise or self.noise_mode == "crn") \
+            and self.faults is None
 
     @property
     def engine(self):
@@ -110,7 +129,8 @@ class Simulator:
         return self._engine
 
     # -- single overlap group (sequential reference path) ----------------
-    def run_group(self, g: OverlapGroup, cfgs: List[CommConfig]) -> GroupMeasurement:
+    def run_group(self, g: OverlapGroup, cfgs: List[CommConfig], *,
+                  fstate: FaultState = None) -> GroupMeasurement:
         assert len(cfgs) == len(g.comms)
         hw = self.hw
         if self.noise:
@@ -120,6 +140,22 @@ class Simulator:
         else:
             jit_comp = [1.0] * len(g.comps)
             jit_comm = [1.0] * len(g.comms)
+
+        comm_hw = None
+        if fstate is not None:
+            # active fault window: per-comm degraded link hardware, a
+            # global comp slowdown, and this step's jitter burst folded
+            # into the submission multipliers
+            comm_hw = [
+                fstate.hardware_for(op.site_id, op.name.split(".", 1)[0], hw)
+                for op in g.comms]
+            if fstate.comp_scale != 1.0:
+                jit_comp = [j * fstate.comp_scale for j in jit_comp]
+            if fstate.sigma:
+                b_comp, b_comm = fstate.burst_jitters(
+                    len(g.comps), len(g.comms))
+                jit_comp = [j * b for j, b in zip(jit_comp, b_comp)]
+                jit_comm = [j * b for j, b in zip(jit_comm, b_comm)]
 
         # remaining work is tracked in fractions of each op
         comp_left = [1.0] * len(g.comps)
@@ -136,12 +172,17 @@ class Simulator:
                 raise RuntimeError("simulator did not converge")
             active_cfg = cfgs[ki] if ki < len(g.comms) else None
             comp_active = ci < len(g.comps)
+            # the active comm's (possibly degraded) link sets the contention
+            # terms for BOTH streams: a slower link shrinks the comm's
+            # memory-bandwidth draw V, so overlapped compute responds too
+            cur_hw = comm_hw[ki] if comm_hw is not None and ki < len(g.comms) \
+                else hw
 
             comp_rate_dur = comm_rate_dur = math.inf
             if comp_active:
-                comp_rate_dur = C.comp_time(g.comps[ci], active_cfg, hw) * jit_comp[ci]
+                comp_rate_dur = C.comp_time(g.comps[ci], active_cfg, cur_hw) * jit_comp[ci]
             if ki < len(g.comms):
-                comm_rate_dur = C.comm_time(g.comms[ki], cfgs[ki], hw,
+                comm_rate_dur = C.comm_time(g.comms[ki], cfgs[ki], cur_hw,
                                             compute_active=comp_active) * jit_comm[ki]
 
             dt_options = []
@@ -167,18 +208,35 @@ class Simulator:
         return GroupMeasurement(name=g.name, Z=t, X=comm_busy, Y=comp_busy,
                                 comm_times=comm_meas, comp_times=comp_meas)
 
+    def _fault_states(self, count: int):
+        """The fault window for each of the next ``count`` logical
+        invocations (fault clock = pre-increment ``profile_count``), or
+        ``None`` when no window is active — the fault-free fast path."""
+        if self.faults is None:
+            return None
+        states = [self.faults.state_at(self.profile_count + i)
+                  for i in range(count)]
+        return states if any(s is not None for s in states) else None
+
     # -- full workload ------------------------------------------------------
     def profile(self, wl: Workload, configs: ConfigSet) -> Measurement:
+        states = self._fault_states(1)
         self.profile_count += 1
         gms = []
         for gi, g in enumerate(wl.groups):
             cfgs = [configs[(gi, ci)] for ci in range(len(g.comms))]
-            gms.append(self.engine.measure_one(g, cfgs) if self.batched
-                       else self.run_group(g, cfgs))
+            if states is not None:
+                gms.append(self.run_group(g, cfgs, fstate=states[0]))
+            else:
+                gms.append(self.engine.measure_one(g, cfgs) if self.batched
+                           else self.run_group(g, cfgs))
         return Measurement(Z=sum(g.Z for g in gms), groups=gms)
 
     def profile_group(self, g: OverlapGroup, cfgs: List[CommConfig]) -> GroupMeasurement:
+        states = self._fault_states(1)
         self.profile_count += 1
+        if states is not None:
+            return self.run_group(g, cfgs, fstate=states[0])
         if self.batched:
             return self.engine.measure_one(g, cfgs)
         return self.run_group(g, cfgs)
@@ -188,10 +246,17 @@ class Simulator:
         """Batched ProfileTime: one logical invocation per candidate (the
         Fig. 8c counter sees exactly what a loop of ``profile_group`` calls
         would), evaluated in a single vectorized pass.  An empty candidate
-        list returns ``[]`` without touching the engine or the counter."""
+        list returns ``[]`` without touching the engine or the counter.
+        When a fault window covers any candidate's step, the whole call
+        takes the scalar reference path (the two paths are bit-identical,
+        so unfaulted candidates are unaffected) with per-candidate states."""
         if not cfg_lists:
             return []
+        states = self._fault_states(len(cfg_lists))
         self.profile_count += len(cfg_lists)
+        if states is not None:
+            return [self.run_group(g, cfgs, fstate=s)
+                    for cfgs, s in zip(cfg_lists, states)]
         if self.batched:
             return self.engine.measure_many(g, cfg_lists)
         return [self.run_group(g, cfgs) for cfgs in cfg_lists]
@@ -205,11 +270,22 @@ class Simulator:
         candidate, summed across requests, so an interleaved schedule
         reports the same ``profile_count`` as the serial walk.  In noisy
         mode the reference path consumes the jitter RNG in flat submission
-        order, matching the engine's draw contract (core.scheduler)."""
+        order, matching the engine's draw contract (core.scheduler); the
+        fault clock ticks in the same flat candidate order."""
         total = sum(len(cfg_lists) for _, cfg_lists in requests)
         if not total:
             return [[] for _ in requests]
+        states = self._fault_states(total)
         self.profile_count += total
+        if states is not None:
+            out, k = [], 0
+            for g, cfg_lists in requests:
+                row = []
+                for cfgs in cfg_lists:
+                    row.append(self.run_group(g, cfgs, fstate=states[k]))
+                    k += 1
+                out.append(row)
+            return out
         if self.batched:
             return self.engine.measure_many_grouped(requests)
         return [[self.run_group(g, cfgs) for cfgs in cfg_lists]

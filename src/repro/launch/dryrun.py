@@ -40,6 +40,15 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# what a failing lower/compile actually raises: shape/spec mismatches
+# (ValueError/TypeError), bad axis/param lookups (KeyError/IndexError),
+# model-side invariants (AssertionError), unimplemented family paths
+# (NotImplementedError), and XLA compile failures (XlaRuntimeError is a
+# RuntimeError subclass).  Anything else — KeyboardInterrupt, MemoryError,
+# a genuine bug — propagates instead of becoming an "error" record.
+_DRYRUN_ERRORS = (ValueError, TypeError, KeyError, IndexError,
+                  AssertionError, NotImplementedError, RuntimeError)
+
 
 def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Sum operand bytes of every collective op in the (post-SPMD) HLO."""
@@ -210,7 +219,7 @@ def run_one(arch, shape_name, multi_pod, out_dir=OUT_DIR, **kw):
     tag = "pod2" if multi_pod else "pod1"
     try:
         rec = build_dryrun(arch, shape_name, multi_pod=multi_pod, **kw)
-    except Exception as e:  # noqa
+    except _DRYRUN_ERRORS as e:
         rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                "status": "error", "error": f"{type(e).__name__}: {e}",
                "trace": traceback.format_exc()[-2000:]}
@@ -255,15 +264,28 @@ def main(argv=None):
                          "changes at launch; decode-shape plans list their "
                          "serve.layer{i}.* sites here, which the serving "
                          "engines consume via the sited trunk path")
+    ap.add_argument("--demote", default="",
+                    help="comma-separated SiteIds to demote to XLA-default "
+                         "knobs after installing --tuned-plan (audit what a "
+                         "runtime health demotion would hand each site; the "
+                         "table grows a 'health' column marking them)")
     args = ap.parse_args(argv)
 
     if args.tuned_plan:
         from repro.core.apply import activate
         from repro.core.session import TunedPlan
         from repro.launch.plan import print_runtime_table
+        from repro.parallel import collectives as C
         plan = TunedPlan.load(args.tuned_plan)
-        activate(plan)
-        print_runtime_table(plan)
+        rt = activate(plan)
+        demoted = [s for s in args.demote.split(",") if s.strip()]
+        if demoted:
+            rt = dict(rt)
+            rt.update({s: C.CollectiveRuntime() for s in demoted})
+            C.install_runtime_plan(rt)
+        print_runtime_table(plan, demoted=demoted)
+    elif args.demote:
+        ap.error("--demote requires --tuned-plan")
 
     archs = [args.arch] if args.arch else ASSIGNED_ARCHS
     shapes = [args.shape] if args.shape else list(INPUT_SHAPES)

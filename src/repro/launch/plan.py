@@ -127,28 +127,37 @@ def resolve_plan_repo(repo_dir: str, cfg, *, parallel: str, hardware: str,
 # per-site audit table (launch/dryrun.py --tuned-plan)
 # ---------------------------------------------------------------------------
 
-def runtime_table(plan: TunedPlan) -> List[Tuple[str, str, int, str]]:
-    """``(site_id, strategy, num_chunks, matched_plan_key)`` for every comm
-    site the plan was tuned over, resolved against the *active* plan —
-    what a launch with these knobs installed will actually hand each
-    site."""
+def runtime_table(plan: TunedPlan,
+                  demoted=()) -> List[Tuple[str, str, int, str, str]]:
+    """``(site_id, strategy, num_chunks, matched_plan_key, health)`` for
+    every comm site the plan was tuned over, resolved against the *active*
+    plan — what a launch with these knobs installed will actually hand
+    each site.  ``demoted`` marks sites the fault-aware lifecycle (or an
+    operator, via ``--demote``) has degraded to fallback knobs; everything
+    else reads ``ok``."""
     from repro.parallel import collectives
 
+    demoted = set(demoted)
     rows = []
     for s in plan.sites:
         sid = s.get("site") or s["name"]
         rt, src = collectives.explain_runtime(sid, s["name"].split(".")[0])
-        rows.append((sid, rt.strategy, rt.num_chunks, src or "<default>"))
+        health = "demoted" if sid in demoted else "ok"
+        rows.append((sid, rt.strategy, rt.num_chunks, src or "<default>",
+                     health))
     return rows
 
 
-def print_runtime_table(plan: TunedPlan) -> None:
-    """Operator audit: site id -> knobs -> which plan key supplied them."""
-    rows = runtime_table(plan)
+def print_runtime_table(plan: TunedPlan, demoted=()) -> None:
+    """Operator audit: site id -> knobs -> which plan key supplied them
+    (plus a health column when any site is demoted)."""
+    rows = runtime_table(plan, demoted=demoted)
     wid = max([len(r[0]) for r in rows] + [len("site")])
-    print(f"{'site':<{wid}}  {'strategy':<8} {'chunks':>6}  source")
-    for sid, strat, nc, src in rows:
-        print(f"{sid:<{wid}}  {strat:<8} {nc:>6}  {src}")
-    print(f"({len(rows)} comm sites; 'source' is the plan key that "
-          "resolution matched — exact site, dotted prefix, or class "
-          "fallback)")
+    print(f"{'site':<{wid}}  {'strategy':<8} {'chunks':>6}  "
+          f"{'health':<8} source")
+    for sid, strat, nc, src, health in rows:
+        print(f"{sid:<{wid}}  {strat:<8} {nc:>6}  {health:<8} {src}")
+    n_dem = sum(1 for r in rows if r[4] == "demoted")
+    print(f"({len(rows)} comm sites, {n_dem} demoted; 'source' is the plan "
+          "key that resolution matched — exact site, dotted prefix, or "
+          "class fallback)")

@@ -8,6 +8,9 @@ which decodes under it through the sited explicit-collective path
 (``serve.layer{i}.*`` SiteIds) — per batch, via the scoped plan stack.
 ``--engine continuous`` swaps in the continuous-batching engine, which
 re-resolves the repository plan as the in-flight batch shape drifts.
+``--fault-schedule`` arms the fault-aware lifecycle: per-site drift
+detection against the plan's predicted costs and transactional demotion
+of drifted sites, summarized by a degradation report line at exit.
 """
 from __future__ import annotations
 
@@ -56,6 +59,21 @@ def main(argv=None):
                          "kind[:degree[:microbatches]]")
     ap.add_argument("--plan-hardware", default="tpu-v5e",
                     help="hardware profile name for the repo lookup key")
+    ap.add_argument("--fault-schedule", default=None,
+                    help="arm per-site drift detection against a scripted "
+                         "fault schedule (core.faults): a JSON schedule "
+                         "file, or an inline spec like "
+                         "'degrade,site=serve,scale=0.25,start=4'; sites "
+                         "whose simulated observed cost drifts past "
+                         "--health-tolerance for --health-window "
+                         "consecutive batches are demoted to XLA-default "
+                         "knobs mid-serve (transactional hot-swap)")
+    ap.add_argument("--health-window", type=int, default=3,
+                    help="consecutive drifted batches before a site is "
+                         "demoted (K of the K-consecutive detector)")
+    ap.add_argument("--health-tolerance", type=float, default=0.25,
+                    help="relative per-site cost drift (observed/predicted "
+                         "- 1) that counts as a drifted batch")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -71,6 +89,10 @@ def main(argv=None):
         plan_kw = dict(repo=args.plan_repo, plan_hardware=args.plan_hardware,
                        plan_parallel=args.plan_parallel,
                        plan_band=args.plan_band)
+    if args.fault_schedule:
+        plan_kw.update(fault_schedule=args.fault_schedule,
+                       health_window=args.health_window,
+                       health_tolerance=args.health_tolerance)
     rng = jax.random.PRNGKey(0)
     params = M.init_params(cfg, rng)
 
@@ -104,6 +126,8 @@ def main(argv=None):
     if args.plan_repo:
         print(f"plan resolution: {stats['exact']} exact, {stats['banded']} "
               f"banded, {stats['miss']} miss ({stats['swaps']} hot-swaps)")
+    if args.fault_schedule:
+        print(engine.health_report())
 
 
 if __name__ == "__main__":

@@ -13,9 +13,15 @@ nearest same-structure shape) picks the plan for the current shape.  With
 ``plan=`` the plan is pinned; ``set_plan`` hot-swaps it between ticks.
 Compiled steps are cached per plan digest, so a swap retraces rather than
 reusing chunk structure from the previous plan.
+
+Fault-aware serving mirrors the fixed-batch engine: ``fault_schedule=``
+arms per-site drift detection, and a flagged site is demoted between
+ticks via a transactional plan swap — the loop naturally picks up the
+degraded plan's compiled step on its next iteration.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -35,7 +41,9 @@ class ContinuousEngine:
     def __init__(self, cfg, params, *, slots: int, max_seq: int,
                  eos_id: Optional[int] = None, plan=None, repo=None,
                  plan_hardware: str = "tpu-v5e", plan_parallel=None,
-                 plan_band: float = DEFAULT_BAND, mesh=None):
+                 plan_band: float = DEFAULT_BAND, mesh=None,
+                 fault_schedule=None, health_window: int = 3,
+                 health_tolerance: float = 0.25):
         assert cfg.family != "audio", "continuous engine is decoder-only"
         self.cfg = cfg
         self.params = params
@@ -46,6 +54,10 @@ class ContinuousEngine:
                                     hardware=plan_hardware,
                                     parallel=plan_parallel, band=plan_band,
                                     max_seq=max_seq)
+        if fault_schedule is not None:
+            self._binding.attach_faults(fault_schedule,
+                                        tolerance=health_tolerance,
+                                        window=health_window)
         if mesh is None and self._binding.bound and cfg.family in (
                 "dense", "moe", "vlm"):
             from repro.launch.mesh import make_mesh
@@ -72,6 +84,14 @@ class ContinuousEngine:
     @property
     def plan_stats(self) -> Dict[str, int]:
         return dict(self._binding.stats)
+
+    @property
+    def health_events(self) -> List[Dict]:
+        """Structured degradation log (drift / demotion / band events)."""
+        return list(self._binding.events)
+
+    def health_report(self) -> str:
+        return self._binding.health_report()
 
     def _compiled(self, rt) -> Tuple:
         key = self._binding.digest(rt)
@@ -163,7 +183,15 @@ class ContinuousEngine:
                 self._admit(prefill)
                 if not self._active:
                     break
+                t0 = time.perf_counter()
                 nxt, self.caches = step(self.params, self._cur, self.caches)
+                nxt.block_until_ready()
+                dt = time.perf_counter() - t0
+            drifted = self._binding.health_tick(dt)
+            if drifted:
+                # transactional degradation; the loop re-fetches the
+                # compiled step from the swapped plan on the next tick
+                self._binding.demote(drifted, apply=self._compiled)
             self._cur = nxt
             finished = []
             for slot, req in self._active.items():

@@ -10,6 +10,14 @@ collective runtimes at the ``serve.layer{i}.*`` SiteIds — applied through
 the scoped plan stack per batch, with compiled steps cached per plan
 digest so ``set_plan`` hot-swaps between batches retrace instead of
 reusing stale chunk structure.
+
+Fault-aware serving: ``fault_schedule=`` arms per-site drift detection
+(``serving.health``) — each decoded token advances the batch clock, and a
+site whose observed cost drifts past ``health_tolerance`` for
+``health_window`` consecutive batches is demoted mid-generate to its
+fallback knobs via a transactional plan swap (the demoted plan's step is
+retraced before commit; failure rolls back).  ``health_events`` /
+``health_report()`` expose the structured degradation log.
 """
 from __future__ import annotations
 
@@ -59,7 +67,9 @@ class Engine:
     def __init__(self, cfg, params, *, batch_size: int, max_seq: int,
                  backend: Optional[str] = None, plan=None, repo=None,
                  plan_hardware: str = "tpu-v5e", plan_parallel=None,
-                 plan_band: float = DEFAULT_BAND, mesh=None):
+                 plan_band: float = DEFAULT_BAND, mesh=None,
+                 fault_schedule=None, health_window: int = 3,
+                 health_tolerance: float = 0.25):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -69,6 +79,10 @@ class Engine:
                                     hardware=plan_hardware,
                                     parallel=plan_parallel, band=plan_band,
                                     max_seq=max_seq)
+        if fault_schedule is not None:
+            self._binding.attach_faults(fault_schedule,
+                                        tolerance=health_tolerance,
+                                        window=health_window)
         if mesh is None and self._binding.bound and cfg.family in (
                 "dense", "moe", "vlm"):
             from repro.launch.mesh import make_mesh
@@ -85,6 +99,15 @@ class Engine:
     @property
     def plan_stats(self) -> Dict[str, int]:
         return dict(self._binding.stats)
+
+    @property
+    def health_events(self) -> List[Dict]:
+        """Structured degradation log: drift detections, demotions (with
+        rollback status) and band-widening events, in order."""
+        return list(self._binding.events)
+
+    def health_report(self) -> str:
+        return self._binding.health_report()
 
     def _compiled(self, rt) -> Tuple:
         """The (step, prefill) pair traced under plan ``rt`` — cached per
@@ -126,9 +149,21 @@ class Engine:
             offs = jnp.asarray(plen - lens, jnp.int32)
             outs: List[List[int]] = [[] for _ in range(self.batch)]
             for _ in range(max_new):
+                t0 = time.perf_counter()
                 cur, caches = step(self.params, cur, caches, offs)
-                for i, t in enumerate(np.asarray(cur)[:, 0]):
+                row = np.asarray(cur)[:, 0]          # device sync
+                dt = time.perf_counter() - t0
+                for i, t in enumerate(row):
                     outs[i].append(int(t))
+                drifted = self._binding.health_tick(dt)
+                if drifted:
+                    # transactional mid-generate degradation: the demoted
+                    # plan's step is traced before the swap commits, then
+                    # decode continues on the fallback knobs.  Plans bind
+                    # at trace time, so the enclosing scope (entered under
+                    # the old plan) cannot leak into the new step.
+                    self._binding.demote(drifted, apply=self._compiled)
+                    step, _ = self._compiled(self._binding.current)
         return outs
 
     def _prefill_ragged(self, prefill, batch, caches, lens: np.ndarray):

@@ -1,4 +1,5 @@
-"""Plan resolution and hot-swap state for the serving engines.
+"""Plan resolution, hot-swap and fault-aware degradation state for the
+serving engines.
 
 Both engines carry a ``PlanBinding``: either a pinned ``TunedPlan``
 (``plan=``, hot-swappable between batches via ``set_plan``) or a
@@ -16,20 +17,40 @@ Two mechanics matter here:
   decode step keeps the plan it was traced under.  Engines key their
   compiled-step caches on ``digest()``; a hot-swap lands on a different
   key and retraces instead of silently reusing the old chunk structure.
+
+Fault-aware lifecycle (``serving.health`` + ``core.faults``):
+
+* **Drift detection** — ``attach_faults`` arms a per-site
+  ``HealthMonitor`` against the bound plan's predicted costs, fed by
+  simulated telemetry replaying the fault schedule per served batch
+  (``health_tick``).  Sites that drift past tolerance for K consecutive
+  batches come back as demotion candidates.
+* **Graceful degradation** — ``demote`` swaps in a new runtime plan whose
+  affected sites carry fallback knobs (XLA default or their class
+  bucket), *scoped to those sites only* and transactional: an exception
+  from the engine's apply callback rolls back to the prior plan and
+  re-raises.  Every demotion/rollback lands in ``events``.
+* **Band backoff** — repeated repository misses widen the resolution
+  band with capped exponential backoff; any hit resets it to the
+  operator's configured band.
 """
+
 from __future__ import annotations
 
 import contextlib
 import os
-from typing import Dict, Optional, Union
+from typing import Dict, List, Optional, Union
 
 from repro.core.apply import plan_digest
 from repro.core.extract import ParallelPlan, extract_decode_workload, parse_parallel
+from repro.core.faults import parse_fault_schedule
 from repro.core.plan_repo import as_repository
 from repro.core.session import TunedPlan
 from repro.parallel import collectives as C
 
 DEFAULT_BAND = 0.5
+BAND_CAP = 2.0  # backoff ceiling: 3x shape deviation is already a re-tune
+_MIN_BAND = 0.05  # backoff floor so band=0.0 repos still start widening
 
 
 class PlanBinding:
@@ -58,8 +79,19 @@ class PlanBinding:
         self.parallel = parallel or ParallelPlan(kind="tp", tp=1)
         self.repo = as_repository(repo) if repo is not None else None
         self.stats = {"exact": 0, "banded": 0, "miss": 0, "swaps": 0}
+        self.events: List[Dict] = []  # structured degradation event log
+        self.demoted: Dict[str, int] = {}  # site -> batch it was demoted at
+        self._fallbacks: Dict[str, C.CollectiveRuntime] = {}
         self._rt: Optional[Dict] = None
         self._digest = None  # None = never set (the first swap is free)
+        self._plan: Optional[TunedPlan] = None  # last full artifact seen
+        self._batch = 0  # serving-side fault/health clock
+        self._band_now = band  # live band under backoff
+        self._fault_schedule = None
+        self._tolerance = 0.25
+        self._window = 3
+        self._health = None
+        self._telemetry = None
         if plan is not None:
             self.set_plan(plan)
 
@@ -79,7 +111,12 @@ class PlanBinding:
         an already-lowered runtime dict, or ``None`` (unpin)."""
         if isinstance(plan, (str, os.PathLike)):
             plan = TunedPlan.load(plan)
-        rt = plan.runtime_plan() if isinstance(plan, TunedPlan) else plan
+        if isinstance(plan, TunedPlan):
+            self._plan = plan
+            self._health = self._telemetry = None  # re-arm on the new plan
+            rt = plan.runtime_plan()
+        else:
+            rt = plan
         self._swap(rt)
 
     def _swap(self, rt: Optional[Dict]) -> None:
@@ -93,15 +130,46 @@ class PlanBinding:
         """The runtime plan for a batch of ``batch_size`` in-flight
         sequences.  Repo-bound engines rebuild the decode workload at this
         shape and re-resolve (exact > banded > miss, recorded in
-        ``stats``); pinned plans are returned as-is."""
+        ``stats``); pinned plans are returned as-is.  Repeated misses
+        widen the band with capped exponential backoff (logged to
+        ``events``); a hit resets it to the configured band."""
         if self.repo is None:
             return self._rt
         wl = extract_decode_workload(
             self.cfg, self.parallel, global_batch=batch_size, seq=self.max_seq
         )
-        plan, how = self.repo.resolve_explain(wl, self.hardware, band=self.band)
+        plan, how = self.repo.resolve_explain(
+            wl, self.hardware, band=self._band_now
+        )
         self.stats[how] += 1
-        self._swap(plan.runtime_plan() if plan is not None else None)
+        if how == "miss":
+            widened = min(max(self._band_now * 2.0, _MIN_BAND), BAND_CAP)
+            if widened != self._band_now:
+                self.events.append(
+                    {
+                        "event": "band_widened",
+                        "batch": self._batch,
+                        "from": self._band_now,
+                        "to": widened,
+                    }
+                )
+                self._band_now = widened
+        else:
+            self._band_now = self.band
+        if plan is not None:
+            self._plan = plan
+            if self._health is not None and self._health.predicted != (
+                _predicted(plan)
+            ):
+                self._health = self._telemetry = None  # predictions moved
+        rt = plan.runtime_plan() if plan is not None else None
+        if rt is not None and self._fallbacks:
+            # demoted sites stay on their fallback knobs across re-resolves
+            # until the operator resets; a fresh repo hit must not silently
+            # re-trust a site the monitor flagged
+            rt = dict(rt)
+            rt.update(self._fallbacks)
+        self._swap(rt)
         return self._rt
 
     def scope(self, rt: Optional[Dict]):
@@ -117,3 +185,158 @@ class PlanBinding:
         plan too — a later process-global install must not reuse traces
         made under the previous one."""
         return plan_digest(rt if rt is not None else C.active_runtime_plan())
+
+    # -- fault-aware lifecycle ---------------------------------------------
+    def attach_faults(
+        self, schedule, *, tolerance: float = 0.25, window: int = 3
+    ) -> None:
+        """Arm drift detection: replay ``schedule`` (a ``FaultSchedule``,
+        inline spec, or schedule-file path) as per-batch telemetry against
+        the bound plan's predicted site costs.  The monitor is built
+        lazily on the first ``health_tick`` so repo-bound engines arm
+        against whichever plan resolution lands on."""
+        self._fault_schedule = parse_fault_schedule(schedule)
+        self._tolerance = tolerance
+        self._window = window
+        self._health = self._telemetry = None
+
+    def attach_health(self, monitor, telemetry) -> None:
+        """Inject an explicit monitor/telemetry pair (tests, or a real
+        measured-timings feed) instead of the lazy simulated one."""
+        self._health = monitor
+        self._telemetry = telemetry
+
+    def _arm(self) -> bool:
+        if self._health is not None and self._telemetry is not None:
+            return True
+        if self._plan is None:
+            return False
+        from repro.serving.health import HealthMonitor, SimulatedTelemetry
+
+        if self._telemetry is None:
+            if self._fault_schedule is None:
+                return False
+            self._telemetry = SimulatedTelemetry(
+                self._plan, self._fault_schedule
+            )
+        if self._health is None:
+            self._health = HealthMonitor(
+                _predicted(self._plan),
+                tolerance=self._tolerance,
+                window=self._window,
+            )
+        return True
+
+    def health_tick(self, step_s: Optional[float] = None) -> List[str]:
+        """Advance the serving-side batch clock by one served batch and
+        return the sites that just crossed the drift threshold (already
+        demoted sites excluded).  ``step_s`` is the measured wall time of
+        the batch step, recorded on the health events for the report."""
+        idx = self._batch
+        self._batch += 1
+        if not self._arm():
+            return []
+        observed = self._telemetry.observe(idx)
+        newly = [
+            s
+            for s in self._health.observe(idx, observed)
+            if s not in self.demoted
+        ]
+        if newly:
+            self.events.append(
+                {
+                    "event": "drift",
+                    "batch": idx,
+                    "sites": newly,
+                    "drift": {
+                        s: round(self._health.last_drift.get(s, 0.0), 4)
+                        for s in newly
+                    },
+                    "step_s": step_s,
+                }
+            )
+        return newly
+
+    def demote(self, sites, *, apply=None, to: str = "xla") -> Dict:
+        """Gracefully degrade ``sites``: swap to a runtime plan whose exact
+        entries for those sites carry fallback knobs — ``to="xla"`` the
+        XLA-default ``CollectiveRuntime()``, ``to="class"`` the site's
+        class-bucket entry (XLA default when the plan has none).  Sibling
+        sites keep their tuned knobs.  Transactional: ``apply`` (e.g. the
+        engine's compiled-step builder) runs under the new plan before it
+        is committed; an exception rolls back to the prior plan, logs the
+        event as rolled back, and re-raises."""
+        sites = sorted(set(sites))
+        if to not in ("xla", "class"):
+            raise ValueError(f"demotion target must be 'xla' or 'class', got {to!r}")
+        base = dict(self._rt if self._rt is not None else C.active_runtime_plan())
+        fallback = {}
+        for sid in sites:
+            fb = C.CollectiveRuntime()
+            if to == "class":
+                fb = base.get(C.site_class(sid), fb)
+            fallback[sid] = fb
+        new = dict(base)
+        new.update(fallback)
+        prior_rt, prior_digest = self._rt, self._digest
+        self._swap(new)
+        event = {
+            "event": "demotion",
+            "batch": self._batch,
+            "sites": sites,
+            "to": to,
+            "fallback": {
+                s: (fb.strategy, fb.num_chunks) for s, fb in fallback.items()
+            },
+            "rolled_back": False,
+        }
+        if apply is not None:
+            try:
+                apply(new)
+            except Exception:
+                self._rt, self._digest = prior_rt, prior_digest
+                event["rolled_back"] = True
+                self.events.append(event)
+                raise
+        self.events.append(event)
+        for sid in sites:
+            self.demoted[sid] = self._batch
+        self._fallbacks.update(fallback)
+        return event
+
+    def health_report(self) -> str:
+        """One human-readable degradation summary line (the launcher
+        prints this after serving)."""
+        demos = [e for e in self.events if e["event"] == "demotion"]
+        rolled = sum(1 for e in demos if e["rolled_back"])
+        widened = [e for e in self.events if e["event"] == "band_widened"]
+        if not self.events:
+            return (
+                f"health: {self._batch} batches, no drift detected, "
+                "0 sites demoted"
+            )
+        parts = [
+            f"health: {self._batch} batches",
+            f"{len(self.demoted)} site(s) demoted",
+        ]
+        if self.demoted:
+            parts.append(
+                "["
+                + ", ".join(
+                    f"{s}@batch{b}" for s, b in sorted(self.demoted.items())
+                )
+                + "]"
+            )
+        if rolled:
+            parts.append(f"{rolled} rolled-back swap(s)")
+        if widened:
+            parts.append(
+                f"band widened {len(widened)}x to {self._band_now:g}"
+            )
+        return ", ".join(parts)
+
+
+def _predicted(plan: TunedPlan) -> Dict[str, float]:
+    from repro.serving.health import predicted_site_costs
+
+    return predicted_site_costs(plan)

@@ -3,16 +3,30 @@
 Works on any pytree of arrays (params, optimizer state, data-pipeline
 cursor).  Writes are atomic (tmp file + rename); a ``latest`` symlink tracks
 the newest step, and ``keep`` bounds retention.
+
+Restores are fault-tolerant: a corrupt checkpoint (truncated ``.npz``,
+mangled manifest, wrong leaf count) warns and falls back to the newest
+intact *earlier* step instead of crashing the relaunch — a torn write
+should cost one checkpoint interval of progress, not the job.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
+import warnings
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+# what a torn/corrupt checkpoint actually raises when loaded: truncated
+# zip container (BadZipFile), short reads / missing files (OSError covers
+# FileNotFoundError, EOFError for pickled payload stubs), mangled .npy
+# headers or manifest JSON (ValueError covers json.JSONDecodeError), and
+# missing leaf_{i} keys (KeyError).
+_LOAD_ERRORS = (zipfile.BadZipFile, OSError, EOFError, ValueError, KeyError)
 
 
 def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
@@ -41,22 +55,52 @@ def save(path: str, tree, *, step: int, extra: Optional[Dict] = None,
     return ck
 
 
-def restore(path: str, tree_like, *, step: Optional[int] = None):
-    """Restores into the structure of ``tree_like``; returns (tree, step)."""
-    if step is None:
-        with open(os.path.join(path, "latest")) as f:
-            ck = os.path.join(path, f.read().strip())
-    else:
-        ck = os.path.join(path, f"step_{step:08d}")
+def _load_one(ck: str, tree_like):
+    """Load one checkpoint dir into ``tree_like``'s structure (raises on
+    any corruption; see ``_LOAD_ERRORS``)."""
     with np.load(os.path.join(ck, "arrays.npz")) as z:
         arrays = [z[f"leaf_{i}"] for i in range(len(z.files))]
     with open(os.path.join(ck, "manifest.json")) as f:
         manifest = json.load(f)
     leaves, treedef = jax.tree.flatten(tree_like)
-    assert len(leaves) == len(arrays), \
-        f"checkpoint has {len(arrays)} leaves, model expects {len(leaves)}"
-    restored = jax.tree.unflatten(treedef, arrays)
-    return restored, manifest["step"]
+    if len(leaves) != len(arrays):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, model expects {len(leaves)}")
+    return jax.tree.unflatten(treedef, arrays), manifest["step"]
+
+
+def restore(path: str, tree_like, *, step: Optional[int] = None):
+    """Restores into the structure of ``tree_like``; returns (tree, step).
+
+    A corrupt requested checkpoint warns (``RuntimeWarning``) and falls
+    back to the newest intact strictly-earlier step; only when every
+    candidate is unreadable does a ``FileNotFoundError`` surface."""
+    if step is None:
+        with open(os.path.join(path, "latest")) as f:
+            first = f.read().strip()
+    else:
+        first = f"step_{step:08d}"
+    # fallback chain: the requested step, then every strictly-earlier one,
+    # newest first (zero-padded names sort chronologically)
+    earlier = sorted(
+        (d for d in os.listdir(path)
+         if d.startswith("step_") and not d.endswith(".tmp") and d < first),
+        reverse=True)
+    errors = []
+    for name in [first] + earlier:
+        ck = os.path.join(path, name)
+        try:
+            return _load_one(ck, tree_like)
+        except _LOAD_ERRORS as e:
+            errors.append(f"{name}: {type(e).__name__}: {e}")
+            warnings.warn(
+                f"checkpoint {ck} is unreadable ({type(e).__name__}: {e})"
+                + (f" — falling back to {earlier[len(errors) - 1]}"
+                   if len(errors) <= len(earlier) else ""),
+                RuntimeWarning, stacklevel=2)
+    raise FileNotFoundError(
+        f"no intact checkpoint at or before {first} under {path}; tried: "
+        + "; ".join(errors))
 
 
 def _gc(path: str, keep: int) -> None:

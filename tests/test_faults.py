@@ -1,0 +1,260 @@
+"""Fault injection in the cost model: schedule parsing + round-trip,
+byte-identity of the empty schedule, deterministic replay, the physics of
+each fault kind (degrade / straggler / jitter / flap), and minimax-regret
+robust tuning over a fault ensemble."""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    ParallelPlan,
+    Simulator,
+    extract_workload,
+    tune,
+)
+from repro.core.faults import (
+    FaultEvent,
+    FaultSchedule,
+    degraded_hardware,
+    parse_fault_schedule,
+)
+from repro.core.hardware import PROFILES
+from repro.core.plan_repo import PlanRepository
+
+
+def _wl(seq=64, batch=4):
+    cfg = get_smoke_config("llama3-8b")
+    plan = ParallelPlan(kind="fsdp", dp=8)
+    return extract_workload(cfg, plan, seq=seq, global_batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# schedule construction, parsing, serialization
+# ---------------------------------------------------------------------------
+
+
+def test_inline_spec_parses_and_roundtrips(tmp_path):
+    sched = parse_fault_schedule(
+        "seed=7;degrade,site=serve,scale=0.25,start=2;"
+        "flap,period=4,duty=0.5,scale=0.5;straggler,scale=1.5,start=6,stop=9"
+    )
+    assert sched.seed == 7
+    assert [ev.kind for ev in sched.events] == ["degrade", "flap", "straggler"]
+    assert sched.events[0].site == "serve" and sched.events[0].scale == 0.25
+    # JSON round-trip is exact (frozen dataclasses compare by value)
+    assert FaultSchedule.from_json(sched.to_json()) == sched
+    path = tmp_path / "sched.json"
+    sched.save(str(path))
+    assert FaultSchedule.load(str(path)) == sched
+    # parse_fault_schedule: None / FaultSchedule pass through, paths load
+    assert parse_fault_schedule(None) is None
+    assert parse_fault_schedule(sched) is sched
+    assert parse_fault_schedule(str(path)) == sched
+
+
+def test_spec_and_event_validation():
+    with pytest.raises(ValueError, match="fault kind"):
+        parse_fault_schedule("meteor,scale=0.5")
+    with pytest.raises(ValueError, match="unknown fault event field"):
+        parse_fault_schedule("degrade,wat=1")
+    with pytest.raises(ValueError, match="not key=value"):
+        parse_fault_schedule("degrade,0.5")
+    with pytest.raises(ValueError, match="empty or negative"):
+        FaultEvent("degrade", start=5, stop=5)
+    with pytest.raises(ValueError, match="positive multiplier"):
+        FaultEvent("degrade", scale=0.0)
+    with pytest.raises(ValueError, match="period > 0"):
+        FaultEvent("flap")
+    with pytest.raises(ValueError, match="duty"):
+        FaultEvent("flap", period=4, duty=0.0)
+    with pytest.raises(ValueError, match="sigma"):
+        FaultEvent("jitter", sigma=-1.0)
+
+
+def test_event_windows_and_site_matching():
+    ev = FaultEvent("degrade", start=2, stop=5, site="serve.layer0.")
+    got = [ev.active(s) for s in range(7)]
+    assert got == [False, False, True, True, True, False, False]
+    assert ev.site == "serve.layer0"  # trailing dot normalized away
+    assert ev.matches("serve.layer0", "ag")  # exact
+    assert ev.matches("serve.layer0.mlp.ag", "ag")  # dotted prefix
+    assert not ev.matches("serve.layer1.mlp.ag", "ag")
+    by_class = FaultEvent("degrade", site="ag")
+    assert by_class.matches("anything.at.all.ag", "ag")
+    assert not by_class.matches("anything.at.all.rs", "rs")
+    everything = FaultEvent("degrade")
+    assert everything.matches("x", "rs")
+
+
+def test_flap_duty_cycle_and_state_composition():
+    sched = FaultSchedule(
+        events=(
+            FaultEvent("flap", period=4, duty=0.5, scale=0.5, stop=8),
+            FaultEvent("straggler", scale=2.0, start=1, stop=3),
+            FaultEvent("jitter", sigma=0.3, start=2, stop=3),
+        )
+    )
+    # flap: degraded for the first duty fraction of each cycle
+    def comm_on(s):
+        st = sched.state_at(s)
+        return st is not None and bool(st.comm_events)
+
+    on = [comm_on(s) for s in range(8)]
+    assert on == [True, True, False, False, True, True, False, False]
+    # composition at step 2: flap off, straggler + jitter on
+    st = sched.state_at(2)
+    assert st.comp_scale == 2.0 and st.sigma == 0.3 and not st.comm_events
+    # quiet steps are None (the simulator's fast path)
+    assert sched.state_at(3) is None and sched.state_at(100) is None
+
+
+def test_degraded_hardware_physics_and_memoization():
+    hw = PROFILES["tpu-v5e"]
+    assert degraded_hardware(hw, 1.0) is hw
+    deg = degraded_hardware(hw, 0.25)
+    assert deg.link_bw == hw.link_bw * 0.25
+    assert deg.chan_bw == hw.chan_bw * 0.25
+    assert degraded_hardware(hw, 0.25) is deg  # memoized
+    st = FaultSchedule(
+        events=(FaultEvent("degrade", site="serve", scale=0.25),)
+    ).state_at(0)
+    assert st.hardware_for("serve.layer0.mlp.ag", "ag", hw) is deg
+    assert st.hardware_for("fsdp.layer0.ag", "ag", hw) is hw  # unmatched
+
+
+def test_burst_jitters_deterministic_in_seed_and_step():
+    sched = FaultSchedule(events=(FaultEvent("jitter", sigma=0.3),), seed=7)
+    a = sched.state_at(0).burst_jitters(3, 2)
+    b = sched.state_at(0).burst_jitters(3, 2)
+    assert a == b  # pure function of (seed, step)
+    c = sched.state_at(1).burst_jitters(3, 2)
+    assert a != c  # a different step draws a different burst
+    other = FaultSchedule(events=(FaultEvent("jitter", sigma=0.3),), seed=8)
+    assert other.state_at(0).burst_jitters(3, 2) != a
+    calm = FaultSchedule(events=(FaultEvent("straggler", scale=2.0),))
+    assert calm.state_at(0).burst_jitters(2, 2) == ([1.0, 1.0], [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# simulator integration: empty schedule is byte-identical, replay is
+# deterministic, and each kind moves the physics the right way
+# ---------------------------------------------------------------------------
+
+
+def test_empty_schedule_is_byte_identical_to_fault_free():
+    wl = _wl()
+    p0 = tune(wl, "tpu-v5e", method="nccl")
+    p1 = tune(wl, "tpu-v5e", method="nccl", faults=FaultSchedule())
+    p2 = tune(wl, "tpu-v5e", method="nccl", faults="")
+    assert p0.configs == p1.configs == p2.configs
+    assert p0.traces == p1.traces == p2.traces
+    assert p0.profile_count == p1.profile_count == p2.profile_count
+    assert p1.faults == {} and p2.faults == {}
+    # an armed simulator with an empty schedule keeps the fault-free path
+    assert Simulator(PROFILES["tpu-v5e"], faults=FaultSchedule()).faults is None
+
+
+def test_faulted_tuning_is_deterministic_and_records_provenance():
+    wl = _wl()
+    spec = "degrade,scale=0.5"
+    p0 = tune(wl, "tpu-v5e", method="nccl", faults=spec)
+    p1 = tune(wl, "tpu-v5e", method="nccl", faults=spec)
+    assert p0.configs == p1.configs and p0.traces == p1.traces
+    sched = p0.faults["schedule"]
+    assert FaultSchedule.from_dict(sched).events[0].kind == "degrade"
+    # provenance survives the JSON round-trip (backward-compatible field)
+    clone = type(p0).from_json(p0.to_json())
+    assert clone.faults == p0.faults
+
+
+def test_degrade_raises_comm_busy_time():
+    wl = _wl(seq=128, batch=32)  # enough payload to leave the latency floor
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    ok = plan.evaluate(wl)
+    bad = plan.evaluate(wl, faults="degrade,scale=0.1")
+    assert bad.X > ok.X * 1.2  # comm busy time rises on the degraded link
+    with pytest.raises(ValueError, match="sim= carries its own"):
+        plan.evaluate(wl, sim=Simulator(PROFILES["tpu-v5e"]), faults="")
+
+
+def test_straggler_slows_compute():
+    wl = _wl()
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    ok = plan.evaluate(wl)
+    slow = plan.evaluate(wl, faults="straggler,scale=2.0")
+    # not exactly 2x: doubling compute durations reshuffles the comm
+    # overlap, so the contention penalty inside Y moves too
+    assert slow.Y > ok.Y * 1.5
+    assert slow.Z > ok.Z
+
+
+def test_jitter_burst_perturbs_measurements_reproducibly():
+    wl = _wl()
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    calm = plan.evaluate(wl)
+    j0 = plan.evaluate(wl, faults="seed=1;jitter,sigma=0.3")
+    j1 = plan.evaluate(wl, faults="seed=1;jitter,sigma=0.3")
+    j2 = plan.evaluate(wl, faults="seed=2;jitter,sigma=0.3")
+    assert j0.Z == j1.Z  # same seed -> bit-equal replay
+    assert j0.Z != calm.Z and j0.Z != j2.Z
+
+
+def test_windowed_fault_hits_only_scheduled_steps():
+    hw = PROFILES["tpu-v5e"]
+    wl = _wl(seq=128, batch=32)
+    plan = tune(wl, "tpu-v5e", method="nccl")
+    # the fault clock advances one step per profile: steps 0,1 healthy,
+    # step 2 onward degraded
+    sim = Simulator(hw, faults=parse_fault_schedule("degrade,scale=0.1,start=2"))
+    z = [sim.profile(wl, plan.configs).Z for _ in range(4)]
+    assert z[0] == z[1]
+    assert z[2] > z[0] and z[3] == z[2]
+
+
+# ---------------------------------------------------------------------------
+# robust tuning: minimax regret over a fault ensemble
+# ---------------------------------------------------------------------------
+
+
+def test_robust_tuning_minimax_regret_provenance(tmp_path):
+    wl = _wl()
+    ensemble = ["degrade,scale=0.25", "straggler,scale=1.5"]
+    plan = tune(
+        wl, "tpu-v5e", method="nccl", fault_ensemble=ensemble, repo=str(tmp_path)
+    )
+    meta = plan.faults
+    assert meta["robust"] is True
+    assert len(meta["ensemble"]) == 2
+    assert set(meta["regrets"]) == {"nominal", "robust[0]", "robust[1]"}
+    assert all(r >= 0 for r in meta["regrets"].values())
+    assert meta["selected"] in meta["regrets"]
+    assert meta["worst_case_regret"] == meta["regrets"][meta["selected"]]
+    assert meta["worst_case_regret"] == min(meta["regrets"].values())
+    # total search cost spans every candidate + the scoring pass
+    assert meta["total_profiles"] > plan.profile_count
+    # the artifact (with its fault provenance) landed in the repository
+    stored, how = PlanRepository(str(tmp_path)).resolve_explain(wl, "tpu-v5e")
+    assert how == "exact" and stored.faults["robust"] is True
+
+
+def test_fault_kwarg_conflicts_are_rejected():
+    wl = _wl()
+    ens = ["degrade,scale=0.25"]
+    with pytest.raises(ValueError, match="faults|fault_ensemble"):
+        tune(wl, "tpu-v5e", faults="degrade,scale=0.5", fault_ensemble=ens)
+    sim = Simulator(PROFILES["tpu-v5e"])
+    with pytest.raises(ValueError, match="simulator"):
+        tune(wl, simulator=sim, faults="degrade,scale=0.5")
+    with pytest.raises(ValueError, match="fault_ensemble|simulator"):
+        tune(wl, simulator=sim, fault_ensemble=["degrade,scale=0.5"])
+    with pytest.raises(ValueError, match="empty"):
+        tune(wl, "tpu-v5e", fault_ensemble=[""])
+
+
+def test_dataclass_replace_keeps_schedule_frozen():
+    ev = FaultEvent("degrade", scale=0.5, site="serve")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        ev.scale = 0.25
+    assert dataclasses.replace(ev, scale=0.25).scale == 0.25

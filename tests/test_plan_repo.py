@@ -236,7 +236,9 @@ def test_banded_resolve_refuses_structural_mismatch(tmp_path):
     assert repo.resolve_explain(near_seq, "tpu-v5e", band=0.5)[1] == "banded"
 
 
-def test_banded_resolve_reverifies_provenance(tmp_path):
+def test_banded_resolve_quarantines_corrupt_neighbor(tmp_path):
+    import os
+
     repo = PlanRepository(tmp_path)
     plan = tune(_decode_wl(batch=4), "tpu-v5e", method="nccl", repo=repo)
     path = repo.path_for(plan.fingerprint, "tpu-v5e")
@@ -245,9 +247,32 @@ def test_banded_resolve_reverifies_provenance(tmp_path):
     doc["fingerprint"] = "0" * 64
     with open(path, "w") as f:
         json.dump(doc, f)
-    # the banded scan get()s each candidate, so tampering surfaces there too
-    with pytest.raises(PlanRepoError, match="misfiled/tampered"):
-        repo.resolve_explain(_decode_wl(batch=6), "tpu-v5e", band=0.5)
+    # the banded scan still get()s each candidate, but a bad neighbor is
+    # quarantined and skipped rather than aborting the whole lookup
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        got = repo.resolve_explain(_decode_wl(batch=6), "tpu-v5e", band=0.5)
+    assert got == (None, "miss")
+    assert not os.path.exists(path)
+    assert os.path.exists(path + ".corrupt")
+    assert len(repo) == 0  # .corrupt files drop out of entries()
+    # a healthy sibling put after the quarantine resolves normally
+    good = tune(_decode_wl(batch=8), "tpu-v5e", method="nccl", repo=repo)
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        # re-corrupt an entry to prove the scan skips it *and* still
+        # returns the surviving banded hit
+        bad2 = tune(_decode_wl(batch=4), "tpu-v5e", method="nccl", repo=repo)
+        p2 = repo.path_for(bad2.fingerprint, "tpu-v5e")
+        with open(p2, "w") as f:
+            f.write("{not json")
+        got, how = repo.resolve_explain(_decode_wl(batch=6), "tpu-v5e",
+                                        band=0.5)
+    assert how == "banded" and got == good
+    # direct get() of a corrupt entry you explicitly ask for stays strict
+    p3 = repo.path_for(good.fingerprint, "tpu-v5e")
+    with open(p3, "w") as f:
+        f.write("{not json")
+    with pytest.raises(PlanRepoError, match="truncated or corrupt"):
+        repo.get(good.fingerprint, "tpu-v5e")
 
 
 def test_parse_parallel_specs():

@@ -288,6 +288,28 @@ def test_a2a_indivisible_chunks_warn_with_site():
         )
 
 
+def test_moe_buffer_guard_warns_with_site_and_matches_gspmd():
+    """The fifth indivisible-chunk path: an expert buffer whose (E, cap)
+    does not divide the mesh axis falls back to the GSPMD expert layout —
+    warning once, naming the SiteId — with numerics identical to the
+    mesh-free path."""
+    from repro.models import layers as L, model as M
+
+    cfg = get_smoke_config("deepseek-moe-16b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    mp = jax.tree.map(lambda a: a[0], params["trunk"]["moe_layers"])["moe"]
+    x = jnp.ones((2, 8, cfg.d_model)) * 0.1
+
+    class FakeMesh:  # guard reads mesh.shape before discarding the mesh
+        shape = {"model": 3}  # E=4, cap=10: neither divides 3
+
+    ref, aux_ref = L.moe_block(mp, cfg, x)
+    with pytest.warns(RuntimeWarning, match="ep.layer0.moe"):
+        out, aux = L.moe_block(mp, cfg, x, mesh=FakeMesh(), site="ep.layer0.moe")
+    assert jnp.allclose(ref, out)
+    assert jnp.allclose(aux_ref, aux)
+
+
 def test_pipeline_p2p_site_resolves_and_warns_on_indivisible():
     from repro.parallel.pipeline import pipeline_apply
 

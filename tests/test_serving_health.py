@@ -1,0 +1,272 @@
+"""Fault-aware plan lifecycle at serving time: the K-consecutive drift
+detector, simulated telemetry replaying a fault schedule, transactional
+site demotion with rollback, resolution-band backoff, and the end-to-end
+drill — a mid-serve link degradation on ``serve.*`` sites must be
+detected within the health window and demoted to fallback knobs while
+generation completes."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import ParallelPlan, extract_decode_workload, tune
+from repro.core.faults import FaultEvent, FaultSchedule
+from repro.models import model as M
+from repro.parallel import collectives as C
+from repro.serving import make_engine
+from repro.serving.health import (
+    HealthMonitor,
+    SimulatedTelemetry,
+    predicted_site_costs,
+)
+from repro.serving.plans import BAND_CAP, PlanBinding
+
+CFG = get_smoke_config("llama3-8b")  # 2 dense layers
+
+DEGRADE_AT_2 = FaultSchedule(
+    events=(FaultEvent("degrade", site="serve", scale=0.1, start=2),)
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan_state():
+    yield
+    C.install_runtime_plan({})
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def decode_plan():
+    pp = ParallelPlan(kind="tp", tp=2)
+    wl = extract_decode_workload(CFG, pp, global_batch=32, seq=128)
+    return tune(wl, "tpu-v5e", method="nccl")
+
+
+def _prompts(n, size=8):
+    rs = np.random.default_rng(0)
+    return [
+        rs.integers(0, CFG.vocab_size, size=size).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor: the K-consecutive drift detector
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_requires_k_consecutive_drifted_batches():
+    mon = HealthMonitor({"a": 1.0, "b": 1.0}, tolerance=0.25, window=3)
+    drifted = {"a": 2.0, "b": 1.0}
+    assert mon.observe(0, drifted) == []
+    assert mon.observe(1, drifted) == []
+    assert mon.observe(2, drifted) == ["a"]  # third consecutive -> flagged
+    assert mon.observe(3, drifted) == []  # reported exactly once
+    assert mon.unhealthy == {"a"}
+    assert mon.last_drift["a"] == pytest.approx(1.0)
+
+
+def test_monitor_streak_resets_on_recovery():
+    mon = HealthMonitor({"a": 1.0}, tolerance=0.25, window=2)
+    assert mon.observe(0, {"a": 2.0}) == []
+    assert mon.observe(1, {"a": 1.0}) == []  # recovered: streak resets
+    assert mon.observe(2, {"a": 2.0}) == []
+    assert mon.observe(3, {"a": 2.0}) == ["a"]  # needs 2 fresh in a row
+
+
+def test_monitor_reset_and_unknown_sites():
+    mon = HealthMonitor({"a": 1.0}, tolerance=0.25, window=1)
+    # sites without a prediction are ignored, not crashed on
+    assert mon.observe(0, {"a": 2.0, "ghost": 9.0}) == ["a"]
+    mon.reset()
+    assert mon.unhealthy == set() and mon.last_drift == {}
+    assert mon.observe(1, {"a": 2.0}) == ["a"]  # flaggable again
+    with pytest.raises(ValueError, match="tolerance"):
+        HealthMonitor({}, tolerance=0.0)
+    with pytest.raises(ValueError, match="window"):
+        HealthMonitor({}, window=0)
+
+
+# ---------------------------------------------------------------------------
+# predicted costs + simulated telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_predicted_costs_cover_every_serve_site(decode_plan):
+    costs = predicted_site_costs(decode_plan)
+    assert costs and all(c > 0 for c in costs.values())
+    assert all(s.startswith("serve.") for s in costs)
+
+
+def test_telemetry_replays_fault_windows_per_site(decode_plan):
+    tel = SimulatedTelemetry(decode_plan, DEGRADE_AT_2)
+    healthy = predicted_site_costs(decode_plan)
+    assert tel.observe(0) == healthy  # pre-fault: observed == predicted
+    degraded = tel.observe(2)
+    assert all(degraded[s] > healthy[s] * 1.25 for s in healthy)
+    # a filter that matches nothing leaves every site healthy
+    elsewhere = FaultSchedule(
+        events=(FaultEvent("degrade", site="fsdp", scale=0.1),)
+    )
+    assert SimulatedTelemetry(decode_plan, elsewhere).observe(0) == healthy
+
+
+# ---------------------------------------------------------------------------
+# end-to-end drill: mid-serve degradation -> detect -> demote -> complete
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_engine_detects_and_demotes_mid_generate(params, decode_plan):
+    eng = make_engine(
+        CFG,
+        params,
+        mode="fixed",
+        batch_size=32,
+        max_seq=128,
+        plan=decode_plan,
+        fault_schedule=DEGRADE_AT_2,
+        health_window=2,
+        health_tolerance=0.25,
+    )
+    outs = eng.generate(_prompts(32), max_new=8)
+    assert all(len(o) == 8 for o in outs)  # generation completed
+
+    kinds = [e["event"] for e in eng.health_events]
+    assert "drift" in kinds and "demotion" in kinds
+    drift = next(e for e in eng.health_events if e["event"] == "drift")
+    # fault starts at batch 2; window=2 flags on the second drifted batch
+    assert drift["batch"] == 3
+    assert all(d > 0.25 for d in drift["drift"].values())
+    demo = next(e for e in eng.health_events if e["event"] == "demotion")
+    assert not demo["rolled_back"]
+    assert demo["sites"] and all(s.startswith("serve.") for s in demo["sites"])
+
+    # fallback knobs actually resolve at the demoted sites (exact match)
+    rt = eng._binding.current
+    for sid in demo["sites"]:
+        assert rt[sid] == C.CollectiveRuntime()
+        with eng._binding.scope(rt):
+            got, src = C.explain_runtime(sid, C.site_class(sid))
+            assert src == sid and got.strategy == "xla"
+    # the demoted plan was retraced, not reused (distinct digest)
+    assert len(eng._fns) == 2
+    assert "demoted" in eng.health_report()
+
+
+def test_continuous_engine_demotes_between_ticks(params, decode_plan):
+    from repro.serving import Request
+
+    eng = make_engine(
+        CFG,
+        params,
+        mode="continuous",
+        slots=32,
+        max_seq=128,
+        plan=decode_plan,
+        fault_schedule=DEGRADE_AT_2,
+        health_window=2,
+        health_tolerance=0.25,
+    )
+    prompts = _prompts(32)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=8))
+    done = eng.run()
+    assert len(done) == 32 and all(len(r.out) == 8 for r in done)
+    kinds = [e["event"] for e in eng.health_events]
+    assert "drift" in kinds and "demotion" in kinds
+    assert eng._binding.demoted
+
+
+def test_engine_without_schedule_reports_healthy(params):
+    eng = make_engine(CFG, params, mode="fixed", batch_size=2, max_seq=32)
+    eng.generate(_prompts(2), max_new=4)
+    assert eng.health_events == []
+    assert "no drift detected" in eng.health_report()
+
+
+# ---------------------------------------------------------------------------
+# demotion mechanics: transactional rollback + fallback persistence
+# ---------------------------------------------------------------------------
+
+
+def test_demotion_rolls_back_when_apply_fails(decode_plan):
+    binding = PlanBinding(CFG, plan=decode_plan)
+    before = dict(binding.current)
+    sid = next(iter(predicted_site_costs(decode_plan)))
+
+    def bad_apply(rt):
+        raise RuntimeError("trace boom")
+
+    with pytest.raises(RuntimeError, match="trace boom"):
+        binding.demote([sid], apply=bad_apply)
+    assert binding.current == before  # swapped back
+    assert sid not in binding.demoted
+    event = binding.events[-1]
+    assert event["event"] == "demotion" and event["rolled_back"]
+
+    # the same demotion commits once apply succeeds
+    seen = []
+    binding.demote([sid], apply=seen.append)
+    assert seen and seen[0][sid] == C.CollectiveRuntime()
+    assert binding.current[sid] == C.CollectiveRuntime()
+    assert sid in binding.demoted
+
+
+def test_demote_to_class_falls_back_to_class_bucket(decode_plan):
+    binding = PlanBinding(CFG, plan=decode_plan)
+    sid = next(s for s in predicted_site_costs(decode_plan) if s.endswith(".ag"))
+    cls = C.site_class(sid)
+    want = binding.current.get(cls, C.CollectiveRuntime())
+    event = binding.demote([sid], to="class")
+    assert binding.current[sid] == want
+    assert event["fallback"][sid] == (want.strategy, want.num_chunks)
+    with pytest.raises(ValueError, match="demotion target"):
+        binding.demote([sid], to="nope")
+
+
+def test_demoted_fallbacks_survive_repo_re_resolution(tmp_path):
+    pp = ParallelPlan(kind="tp", tp=2)
+    wl = extract_decode_workload(CFG, pp, global_batch=4, seq=32)
+    tune(wl, "tpu-v5e", method="nccl", repo=str(tmp_path))
+    binding = PlanBinding(
+        CFG, repo=str(tmp_path), parallel="tp:2", band=0.5, max_seq=32
+    )
+    rt = binding.resolve(4)
+    sid = next(s for s in rt if s.startswith("serve."))
+    assert rt[sid] != C.CollectiveRuntime()
+    binding.demote([sid])
+    # a fresh repo hit must not silently re-trust the flagged site
+    rt2 = binding.resolve(4)
+    assert rt2[sid] == C.CollectiveRuntime()
+    sibling = next(s for s in rt if s.startswith("serve.") and s != sid)
+    assert rt2[sibling] == rt[sibling]  # siblings keep their tuned knobs
+
+
+# ---------------------------------------------------------------------------
+# resolution-band backoff: misses widen (capped), hits reset
+# ---------------------------------------------------------------------------
+
+
+def test_band_backoff_widens_on_miss_and_resets_on_hit(tmp_path):
+    binding = PlanBinding(
+        CFG, repo=str(tmp_path), parallel="tp:2", band=0.1, max_seq=32
+    )
+    bands = []
+    for _ in range(6):  # empty repo: every resolve misses
+        assert binding.resolve(4) is None
+        bands.append(binding._band_now)
+    assert bands == [0.2, 0.4, 0.8, 1.6, BAND_CAP, BAND_CAP]
+    widened = [e for e in binding.events if e["event"] == "band_widened"]
+    assert len(widened) == 5  # the capped repeat logs no event
+    assert widened[0] == {"event": "band_widened", "batch": 0, "from": 0.1, "to": 0.2}
+    # a hit resets the live band to the operator's configured value
+    pp = ParallelPlan(kind="tp", tp=2)
+    wl = extract_decode_workload(CFG, pp, global_batch=4, seq=32)
+    tune(wl, "tpu-v5e", method="nccl", repo=str(tmp_path))
+    assert binding.resolve(4) is not None
+    assert binding._band_now == 0.1

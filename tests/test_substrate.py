@@ -52,6 +52,35 @@ def test_checkpoint_roundtrip():
         assert step == 9
 
 
+def test_checkpoint_corrupt_falls_back_to_earlier_step():
+    import os
+    import pytest
+    tree = {"a": jnp.arange(4.0), "b": jnp.ones((2,), jnp.int32)}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, tree, step=1)
+        checkpoint.save(d, tree, step=2)
+        checkpoint.save(d, tree, step=3)
+        # truncate the newest checkpoint's arrays mid-write
+        with open(os.path.join(d, "step_00000003", "arrays.npz"), "wb") as f:
+            f.write(b"PK\x03\x04 torn write")
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            restored, step = checkpoint.restore(d, tree)
+        assert step == 2
+        assert np.array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+        # explicit-step restores fall back the same way
+        with open(os.path.join(d, "step_00000002", "manifest.json"), "w") as f:
+            f.write("{not json")
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            _, step = checkpoint.restore(d, tree, step=2)
+        assert step == 1
+        # every candidate corrupt -> a clear error naming what was tried
+        with open(os.path.join(d, "step_00000001", "arrays.npz"), "wb") as f:
+            f.write(b"")
+        with pytest.warns(RuntimeWarning):
+            with pytest.raises(FileNotFoundError, match="no intact checkpoint"):
+                checkpoint.restore(d, tree, step=1)
+
+
 def test_training_reduces_loss():
     cfg = get_smoke_config("stablelm-3b")
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4)
