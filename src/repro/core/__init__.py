@@ -20,6 +20,8 @@
                 + the SearchBackend registry
   plan_repo   — PlanRepository: (fingerprint × hardware) plan store for
                 automatic reuse at launch (--plan-repo)
+  retune      — online re-tuning: telemetry-calibrated, drift-scoped warm
+                re-search + zero-downtime publish (RetuneService)
 """
 from repro.core.comm_params import CommConfig, min_config, vendor_default
 from repro.core.extract import (ParallelPlan, extract_decode_workload,
@@ -30,8 +32,17 @@ from repro.core.hardware import A40_NVLINK, A40_PCIE, PROFILES, TPU_V5E, Hardwar
 from repro.core.plan_repo import PlanRepoError, PlanRepository
 from repro.core.session import (PlanMismatchError, SearchBackend,
                                 SearchOutcome, TunedPlan, available_methods,
-                                register_backend, structure_fingerprint, tune,
+                                register_backend,
+                                structure_fingerprint, tune,
                                 workload_fingerprint, workload_shape)
+
+# ``retune`` names both the submodule and the session front door.  Import
+# the submodule here (first import of ``repro.core.retune`` would
+# otherwise re-bind the package attribute to the module mid-run), then
+# deterministically re-bind the name to the function: ``from repro.core
+# import retune`` always means the front door.
+import repro.core.retune as _retune_module  # noqa: E402,F401
+from repro.core.session import retune  # noqa: E402
 from repro.core.simulator import Measurement, Simulator
 from repro.core.workload import CommOp, CompOp, OverlapGroup, Workload
 
@@ -43,7 +54,7 @@ __all__ = [
     "Simulator", "Measurement",
     "FaultEvent", "FaultSchedule", "parse_fault_schedule",
     "CompOp", "CommOp", "OverlapGroup", "Workload",
-    "tune", "TunedPlan", "PlanMismatchError", "SearchBackend",
+    "tune", "retune", "TunedPlan", "PlanMismatchError", "SearchBackend",
     "SearchOutcome", "register_backend", "available_methods",
     "structure_fingerprint", "workload_fingerprint", "workload_shape",
     "PlanRepository", "PlanRepoError",

@@ -138,7 +138,35 @@ class PlanRepository:
         deviation of ``band`` (e.g. 0.5 = up to 1.5× off) are candidates,
         nearest shape wins.  Every candidate is still provenance-verified
         through ``get`` — banding relaxes the shape, never the trust
-        model.  ``band=0.0`` is the exact pre-band behavior."""
+        model.  ``band=0.0`` is the exact pre-band behavior.
+
+        Args:
+            wl: the live workload to resolve a plan for.
+            hardware: profile (or name) keying the lookup.
+            band: relative shape tolerance; 0 = exact fingerprint only.
+
+        Returns:
+            The stored ``TunedPlan``, or ``None`` on a miss.
+
+        Raises:
+            PlanRepoError: the *exact* entry for the key exists but its
+                provenance disagrees with its filename (corrupt banded
+                neighbors are quarantined, not raised).
+
+        Example::
+
+            >>> import tempfile
+            >>> from repro.configs import get_smoke_config
+            >>> from repro.core import (ParallelPlan,
+            ...                         extract_decode_workload, tune)
+            >>> wl = extract_decode_workload(
+            ...     get_smoke_config("llama3-8b"),
+            ...     ParallelPlan(kind="tp", tp=2), global_batch=8, seq=64)
+            >>> repo = PlanRepository(tempfile.mkdtemp())
+            >>> plan = tune(wl, "tpu-v5e", method="nccl", repo=repo)
+            >>> repo.resolve(wl, "tpu-v5e").fingerprint == plan.fingerprint
+            True
+        """
         plan, _ = self.resolve_explain(wl, hardware, band=band)
         return plan
 
@@ -167,15 +195,9 @@ class PlanRepository:
                 cand = self.get(efp, ehw)   # provenance re-verified
             except PlanRepoError as e:
                 # one bad neighbor must not abort the whole banded scan:
-                # quarantine it (``.corrupt`` drops it from ``entries()``)
-                # and keep looking.  Direct ``get`` stays strict — only
-                # the opportunistic scan degrades gracefully.
-                quarantined = f"{path}.corrupt"
-                os.replace(path, quarantined)
-                warnings.warn(
-                    f"skipping corrupt plan repository entry during banded "
-                    f"resolve: {e}; quarantined to {quarantined}",
-                    RuntimeWarning, stacklevel=2)
+                # quarantine it and keep looking.  Direct ``get`` stays
+                # strict — only the opportunistic scan degrades gracefully.
+                self._quarantine(path, f"during banded resolve: {e}")
                 continue
             if cand is None:
                 continue
@@ -185,6 +207,71 @@ class PlanRepository:
             if d is not None and d < best_d:
                 best, best_d = cand, d
         return (best, "banded") if best is not None else (None, "miss")
+
+    # -- lineage -----------------------------------------------------------
+    def _quarantine(self, path: str, why: str) -> str:
+        """Move a bad entry aside as ``<path>.corrupt`` (dropping it from
+        ``entries()``) and warn — the graceful-degradation path shared by
+        banded scans and lineage walks."""
+        quarantined = f"{path}.corrupt"
+        os.replace(path, quarantined)
+        warnings.warn(
+            f"skipping corrupt plan repository entry {why}; quarantined "
+            f"to {quarantined}",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        return quarantined
+
+    def retune_chain(
+        self, fingerprint: str, hardware: Union[Hardware, str]
+    ) -> List[str]:
+        """The retune ancestry of the stored entry for the key, newest
+        first: ``[entry_digest, parent_digest, grandparent_digest, ...]``.
+
+        ``put`` overwrites one (fingerprint, hardware) key in place, so
+        ancestors live only as the embedded ``lineage["chain"]`` digests
+        — this walks them without needing the ancestor artifacts.  A
+        cold-tuned entry returns a single-element chain; a missing key
+        returns ``[]``.  A corrupt entry or malformed lineage is
+        quarantined (same ``.corrupt`` path as banded scans) and returns
+        ``[]`` instead of breaking the walk.
+
+        Args:
+            fingerprint: the workload fingerprint keying the entry.
+            hardware: profile (or name) keying the entry.
+
+        Returns:
+            Artifact digests, newest (the stored entry itself) first.
+        """
+        hw = _hw_name(hardware)
+        path = self.path_for(fingerprint, hw)
+        try:
+            plan = self.get(fingerprint, hw)
+        except PlanRepoError as e:
+            self._quarantine(path, f"during retune-chain walk: {e}")
+            return []
+        if plan is None:
+            return []
+        lineage = plan.lineage or {}
+        chain = lineage.get("chain", [])
+        parent = lineage.get("retuned_from")
+        malformed = (
+            not isinstance(chain, list)
+            or not all(isinstance(d, str) for d in chain)
+            or (parent is not None and not isinstance(parent, str))
+            or (chain and parent != chain[0])
+            or (parent is not None and not chain)
+        )
+        if malformed:
+            self._quarantine(
+                path,
+                f"during retune-chain walk: lineage of "
+                f"({fingerprint[:12]}…, {hw}) is malformed "
+                f"(retuned_from={parent!r}, chain={chain!r})",
+            )
+            return []
+        return [plan.artifact_digest()] + list(chain)
 
 
 def _shape_distance(tuned: dict, want: dict, band: float) -> Optional[float]:

@@ -239,11 +239,29 @@ def _trace_val_from_json(v):
 @dataclass
 class TunedPlan:
     """A tuned-configuration artifact with provenance — persist it, diff
-    it, ship it to the runtime.  Produced by ``tune``; self-contained: the
+    it, ship it to the runtime.  Produced by ``tune`` (cold) or ``retune``
+    (warm, drift-scoped — provenance in ``.lineage``); self-contained: the
     embedded ``sites`` metadata (one row per comm site: name, kind, payload
     bytes) lets a deserialized plan lower itself to runtime knobs without
     the workload object, while ``fingerprint`` guards every
-    workload-taking operation against structural mismatch."""
+    workload-taking operation against structural mismatch.
+
+    Example — tune, round-trip through JSON, check identity::
+
+        >>> from repro.configs import get_smoke_config
+        >>> from repro.core import ParallelPlan, extract_decode_workload
+        >>> wl = extract_decode_workload(
+        ...     get_smoke_config("llama3-8b"), ParallelPlan(kind="tp", tp=2),
+        ...     global_batch=8, seq=64)
+        >>> plan = tune(wl, "tpu-v5e", method="nccl")
+        >>> again = TunedPlan.from_json(plan.to_json())
+        >>> again.configs == plan.configs
+        True
+        >>> again.artifact_digest() == plan.artifact_digest()
+        True
+        >>> plan.matches(wl) and not plan.lineage
+        True
+    """
     method: str                    # registry name that produced the configs
     mode: str                      # scheduling mode it searched under
     hardware: str                  # Hardware.name it was tuned for
@@ -266,7 +284,24 @@ class TunedPlan:
     # plan files loading): the schedule a plan was tuned under, or — for
     # robust plans — the ensemble, per-candidate regrets and the winner.
     faults: Dict = field(default_factory=dict)
+    # retune lineage (empty for cold-tuned plans; default keeps pre-retune
+    # plan files loading): ``retuned_from`` (parent artifact digest),
+    # ``sites``/``groups`` (the drift scope), ``calibration`` (per-site
+    # observed/predicted/scale deltas), ``generation`` and ``chain`` (every
+    # ancestor digest, newest first) — see ``core.retune``.
+    lineage: Dict = field(default_factory=dict)
     version: int = PLAN_VERSION
+
+    # -- identity ----------------------------------------------------------
+    def artifact_digest(self) -> str:
+        """Content hash of the whole serialized artifact (sha256 hex of
+        ``to_json()``) — the identity retune lineage records ancestors by.
+
+        Returns:
+            64-char hex string; equal plans (all fields, configs and
+            traces included) digest equally, any edit moves it.
+        """
+        return hashlib.sha256(self.to_json(indent=None).encode()).hexdigest()
 
     # -- structural guard --------------------------------------------------
     def matches(self, wl: Workload) -> bool:
@@ -593,7 +628,37 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
     build their own simulators, so they reject ``simulator=``.
 
     Remaining keyword ``options`` go to the backend (e.g. Lagom's
-    ``warm_start``)."""
+    ``warm_start``).
+
+    Args:
+        workload: the overlap-group IR to tune (``core.extract``).
+        hardware: a ``Hardware`` profile or registry name; optional only
+            when ``simulator=`` is passed.
+        method/mode/noise/noise_mode/seed/batched: search backend,
+            schedule and ProfileTime simulator knobs (see above).
+        simulator: reuse an existing ``Simulator`` (RNG state, caches).
+        repo: directory or ``PlanRepository`` to auto-``put`` into.
+        faults / fault_ensemble: scripted degradation for fault-aware or
+            minimax-robust tuning (see above).
+
+    Returns:
+        A ``TunedPlan`` carrying the configs and full provenance.
+
+    Raises:
+        KeyError: unknown ``method`` or ``hardware`` name.
+        ValueError: conflicting simulator/hardware/fault arguments.
+
+    Example::
+
+        >>> from repro.configs import get_smoke_config
+        >>> from repro.core import ParallelPlan, extract_decode_workload
+        >>> wl = extract_decode_workload(
+        ...     get_smoke_config("llama3-8b"), ParallelPlan(kind="tp", tp=2),
+        ...     global_batch=8, seq=64)
+        >>> plan = tune(wl, "tpu-v5e", method="lagom")
+        >>> plan.method, plan.profile_count > 0
+        ('lagom', True)
+    """
     backend = get_backend(method)
     faults = parse_fault_schedule(faults)
     if not faults:
@@ -647,11 +712,66 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
     return plan
 
 
+def retune(plan: TunedPlan, workload: Workload, *, sites=None,
+           telemetry=None, hardware=None, repo=None,
+           max_steps: Optional[int] = None) -> TunedPlan:
+    """Drift-scoped warm re-tune of an installed plan (``core.retune``).
+
+    Where ``tune`` searches every group from scratch, ``retune`` (1)
+    calibrates the simulator's hardware model from observed per-site
+    costs (``telemetry``), (2) re-searches only the comm groups owning
+    the drifted ``sites`` — warm-started from ``plan``'s own configs,
+    re-seeded at the calibrated cost model's balance point — and (3)
+    returns a child ``TunedPlan`` whose ``lineage`` records the parent
+    digest, drift scope and calibration deltas.  Untouched groups keep
+    the parent's configs verbatim.
+
+    Args:
+        plan: the installed ``TunedPlan`` to warm-start from.
+        workload: the live workload; must fingerprint-match ``plan``.
+        sites: drifted SiteIds scoping the re-search (``None`` = every
+            group, still warm-started).
+        telemetry: observed per-site costs (seconds) — a ``{site: cost}``
+            dict or a ``serving.telemetry.SiteTelemetry`` buffer (its
+            most recent row is used).  ``None`` skips calibration.
+        hardware: override profile (default: the plan's own).
+        repo: directory or ``PlanRepository`` to auto-``put`` the child
+            into (same key as the parent — the repo entry advances).
+        max_steps: per-group search-step cap.
+
+    Returns:
+        A new ``TunedPlan`` with ``lineage["retuned_from"]`` set to
+        ``plan.artifact_digest()``.
+
+    Raises:
+        PlanMismatchError: ``workload`` is structurally different from
+            the one ``plan`` was tuned on.
+
+    Example::
+
+        >>> from repro.configs import get_smoke_config
+        >>> from repro.core import ParallelPlan, extract_decode_workload
+        >>> wl = extract_decode_workload(
+        ...     get_smoke_config("llama3-8b"), ParallelPlan(kind="tp", tp=2),
+        ...     global_batch=8, seq=64)
+        >>> parent = tune(wl, "tpu-v5e", method="lagom")
+        >>> child = retune(parent, wl, sites=["serve.layer0.attn.ar"])
+        >>> child.lineage["retuned_from"] == parent.artifact_digest()
+        True
+        >>> child.lineage["generation"]
+        1
+    """
+    from repro.core.retune import retune_plan  # lazy: retune imports session
+
+    return retune_plan(plan, workload, sites=sites, telemetry=telemetry,
+                       hardware=hardware, repo=repo, max_steps=max_steps)
+
+
 __all__ = [
     "MODES", "PLAN_VERSION", "PlanMismatchError", "SearchBackend",
     "SearchOutcome", "TunedPlan", "available_methods", "get_backend",
-    "load_plan", "register_backend", "structure_fingerprint", "tune",
-    "unregister_backend", "workload_fingerprint", "workload_shape",
+    "load_plan", "register_backend", "retune", "structure_fingerprint",
+    "tune", "unregister_backend", "workload_fingerprint", "workload_shape",
 ]
 
 

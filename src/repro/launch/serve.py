@@ -11,6 +11,11 @@ re-resolves the repository plan as the in-flight batch shape drifts.
 ``--fault-schedule`` arms the fault-aware lifecycle: per-site drift
 detection against the plan's predicted costs and transactional demotion
 of drifted sites, summarized by a degradation report line at exit.
+``--retune`` upgrades that lifecycle to the online re-tuning loop:
+flagged drift triggers a telemetry-calibrated, drift-scoped warm re-tune
+(only the affected comm groups re-searched, seeded from the installed
+plan) that is published with lineage and hot-swapped mid-serve; a
+``retune:`` summary line prints at exit.
 """
 from __future__ import annotations
 
@@ -42,7 +47,10 @@ def main(argv=None):
                          "collective runtime knobs; the engine decodes under "
                          "it via the sited serve.layer{i}.* path (dense/moe "
                          "families) and it is installed process-wide for "
-                         "every other explicit chunked-collective site")
+                         "every other explicit chunked-collective site.  "
+                         "With --retune this is the *starting* plan: the "
+                         "online loop may warm re-tune and hot-swap it "
+                         "mid-serve when sites drift")
     ap.add_argument("--plan-repo", default=None,
                     help="PlanRepository directory: the engine re-resolves a "
                          "stored plan for the decode-shape workload "
@@ -74,13 +82,35 @@ def main(argv=None):
     ap.add_argument("--health-tolerance", type=float, default=0.25,
                     help="relative per-site cost drift (observed/predicted "
                          "- 1) that counts as a drifted batch")
+    ap.add_argument("--retune", action="store_true",
+                    help="arm the online re-tuning loop (core.retune): "
+                         "sustained drift triggers a drift-scoped warm "
+                         "re-tune — only the comm groups owning flagged "
+                         "sites are re-searched, calibrated from live "
+                         "telemetry and seeded from the installed plan — "
+                         "published to --plan-repo (when set) with lineage "
+                         "and hot-swapped between batches; demotion stays "
+                         "the fallback when the loop declines")
+    ap.add_argument("--retune-interval", type=int, default=1,
+                    help="minimum batches between re-tune publishes "
+                         "(rate limit)")
+    ap.add_argument("--retune-drift", type=float, default=None,
+                    help="minimum relative drift before re-tuning instead "
+                         "of demoting (default: any flagged drift "
+                         "re-tunes)")
+    ap.add_argument("--retune-max", type=int, default=4,
+                    help="maximum re-tunes per run; beyond the budget "
+                         "flagged sites fall back to demotion")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     plan_kw = {}
     if args.tuned_plan:
         apply_tuned_plan(args.tuned_plan, expect_arch=cfg.name)
-        plan_kw = dict(plan=args.tuned_plan)
+        # the deployed topology matters beyond repo lookups: the re-tune
+        # loop rebuilds the decode workload with it, so a pinned plan
+        # carries --plan-parallel too
+        plan_kw = dict(plan=args.tuned_plan, plan_parallel=args.plan_parallel)
     elif args.plan_repo:
         resolve_plan_repo(args.plan_repo, cfg, parallel=args.plan_parallel,
                           hardware=args.plan_hardware, seq=args.max_seq,
@@ -93,6 +123,10 @@ def main(argv=None):
         plan_kw.update(fault_schedule=args.fault_schedule,
                        health_window=args.health_window,
                        health_tolerance=args.health_tolerance)
+    if args.retune:
+        plan_kw.update(retune=dict(interval=args.retune_interval,
+                                   max_retunes=args.retune_max,
+                                   drift_threshold=args.retune_drift))
     rng = jax.random.PRNGKey(0)
     params = M.init_params(cfg, rng)
 
@@ -128,6 +162,8 @@ def main(argv=None):
               f"banded, {stats['miss']} miss ({stats['swaps']} hot-swaps)")
     if args.fault_schedule:
         print(engine.health_report())
+    if args.retune:
+        print(engine.retune_service.report())
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@
   engine     — fixed-batch lockstep Engine (+ make_serve_step)
   continuous — ContinuousEngine (per-slot caches, admit-time plan re-resolve)
   plans      — PlanBinding: scoped plan application + hot-swap digests
+  health     — HealthMonitor drift detection + predicted site costs
+  telemetry  — SiteTelemetry ring buffer (the re-tune loop's evidence)
 
 ``make_engine`` is the one constructor: pick an engine by ``mode`` and
 hand both the same plan surface (``plan=`` pinned TunedPlan, ``repo=``
@@ -18,6 +20,7 @@ from typing import Callable, Dict
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Engine, make_serve_step
 from repro.serving.plans import DEFAULT_BAND, PlanBinding
+from repro.serving.telemetry import SiteTelemetry
 from repro.serving.types import Request
 
 __all__ = [
@@ -26,6 +29,7 @@ __all__ = [
     "Engine",
     "PlanBinding",
     "Request",
+    "SiteTelemetry",
     "available_engines",
     "make_engine",
     "make_serve_step",
@@ -67,7 +71,11 @@ def make_engine(cfg, params, *, mode: str = "fixed", **kw):
     ``mode`` — "fixed" (lockstep Engine; needs ``batch_size=``) or
     "continuous" (ContinuousEngine; needs ``slots=``).  Both accept
     ``max_seq=`` plus the plan surface: ``plan=`` / ``repo=`` /
-    ``plan_hardware=`` / ``plan_parallel=`` / ``plan_band=`` / ``mesh=``.
+    ``plan_hardware=`` / ``plan_parallel=`` / ``plan_band=`` / ``mesh=``,
+    the fault-aware lifecycle (``fault_schedule=`` / ``health_window=`` /
+    ``health_tolerance=``) and the online re-tune loop (``retune=`` —
+    ``True``, a dict of ``core.retune.RetuneService`` kwargs, or a
+    pre-built service).
     """
     try:
         ctor = _ENGINES[mode]

@@ -43,7 +43,7 @@ class ContinuousEngine:
                  plan_hardware: str = "tpu-v5e", plan_parallel=None,
                  plan_band: float = DEFAULT_BAND, mesh=None,
                  fault_schedule=None, health_window: int = 3,
-                 health_tolerance: float = 0.25):
+                 health_tolerance: float = 0.25, retune=None):
         assert cfg.family != "audio", "continuous engine is decoder-only"
         self.cfg = cfg
         self.params = params
@@ -58,6 +58,8 @@ class ContinuousEngine:
             self._binding.attach_faults(fault_schedule,
                                         tolerance=health_tolerance,
                                         window=health_window)
+        from repro.serving.engine import _make_retune
+        self.retune_service = _make_retune(self._binding, retune)
         if mesh is None and self._binding.bound and cfg.family in (
                 "dense", "moe", "vlm"):
             from repro.launch.mesh import make_mesh
@@ -92,6 +94,11 @@ class ContinuousEngine:
 
     def health_report(self) -> str:
         return self._binding.health_report()
+
+    @property
+    def telemetry(self):
+        """The binding's live ``SiteTelemetry`` ring buffer."""
+        return self._binding.telemetry
 
     def _compiled(self, rt) -> Tuple:
         key = self._binding.digest(rt)
@@ -189,9 +196,13 @@ class ContinuousEngine:
                 dt = time.perf_counter() - t0
             drifted = self._binding.health_tick(dt)
             if drifted:
-                # transactional degradation; the loop re-fetches the
-                # compiled step from the swapped plan on the next tick
-                self._binding.demote(drifted, apply=self._compiled)
+                # online re-tune first; demote when the service declines.
+                # Either way the loop re-fetches the compiled step from
+                # the swapped plan on the next tick (zero dropped tokens).
+                retuned = (self.retune_service.handle(drifted)
+                           if self.retune_service is not None else None)
+                if retuned is None:
+                    self._binding.demote(drifted, apply=self._compiled)
             self._cur = nxt
             finished = []
             for slot, req in self._active.items():

@@ -35,6 +35,20 @@ from repro.serving.types import Request
 __all__ = ["Engine", "Request", "make_serve_step"]
 
 
+def _make_retune(binding, retune):
+    """Lower the engines' ``retune=`` kwarg to a ``core.retune``
+    ``RetuneService``: ``None``/``False`` off, ``True`` defaults, a dict
+    of service kwargs, or an already-built service."""
+    if not retune:
+        return None
+    from repro.core.retune import RetuneService
+
+    if isinstance(retune, RetuneService):
+        return retune
+    opts = {} if retune is True else dict(retune)
+    return RetuneService(binding, **opts)
+
+
 def make_serve_step(cfg, *, backend: Optional[str] = None, mesh=None):
     """serve_step(params, tokens (B,1), caches[, pos_offset (B,)]) ->
     (next (B,1), caches).  ``mesh`` opts dense families into the sited
@@ -69,7 +83,7 @@ class Engine:
                  plan_hardware: str = "tpu-v5e", plan_parallel=None,
                  plan_band: float = DEFAULT_BAND, mesh=None,
                  fault_schedule=None, health_window: int = 3,
-                 health_tolerance: float = 0.25):
+                 health_tolerance: float = 0.25, retune=None):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -83,6 +97,7 @@ class Engine:
             self._binding.attach_faults(fault_schedule,
                                         tolerance=health_tolerance,
                                         window=health_window)
+        self.retune_service = _make_retune(self._binding, retune)
         if mesh is None and self._binding.bound and cfg.family in (
                 "dense", "moe", "vlm"):
             from repro.launch.mesh import make_mesh
@@ -108,6 +123,12 @@ class Engine:
 
     def health_report(self) -> str:
         return self._binding.health_report()
+
+    @property
+    def telemetry(self):
+        """The binding's live ``SiteTelemetry`` ring buffer (one row of
+        observed per-site costs per served batch)."""
+        return self._binding.telemetry
 
     def _compiled(self, rt) -> Tuple:
         """The (step, prefill) pair traced under plan ``rt`` — cached per
@@ -157,12 +178,17 @@ class Engine:
                     outs[i].append(int(t))
                 drifted = self._binding.health_tick(dt)
                 if drifted:
-                    # transactional mid-generate degradation: the demoted
-                    # plan's step is traced before the swap commits, then
-                    # decode continues on the fallback knobs.  Plans bind
-                    # at trace time, so the enclosing scope (entered under
-                    # the old plan) cannot leak into the new step.
-                    self._binding.demote(drifted, apply=self._compiled)
+                    # drift-scoped online re-tune first (zero-downtime plan
+                    # swap between tokens); when the service declines —
+                    # rate-limited, budget spent, or not armed — fall back
+                    # to transactional demotion: the new plan's step is
+                    # traced before the swap commits, then decode continues.
+                    # Plans bind at trace time, so the enclosing scope
+                    # (entered under the old plan) cannot leak in.
+                    retuned = (self.retune_service.handle(drifted)
+                               if self.retune_service is not None else None)
+                    if retuned is None:
+                        self._binding.demote(drifted, apply=self._compiled)
                     step, _ = self._compiled(self._binding.current)
         return outs
 

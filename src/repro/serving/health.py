@@ -33,7 +33,7 @@ from typing import Dict, List, Optional
 
 from repro.core import contention
 from repro.core.comm_params import vendor_default
-from repro.core.faults import FaultSchedule
+from repro.core.faults import FaultSchedule, degraded_hardware
 from repro.core.hardware import Hardware
 from repro.core.session import TunedPlan, _lookup_hw
 from repro.core.workload import CommOp
@@ -63,17 +63,60 @@ def predicted_site_costs(
 ) -> Dict[str, float]:
     """Each comm site's standalone cost (seconds) under the plan's tuned
     config on ``hardware`` (default: the plan's own profile) — the
-    baseline ``HealthMonitor`` measures drift against."""
+    baseline ``HealthMonitor`` measures drift against.
+
+    A re-tuned plan carries calibration lineage (``core.retune``): sites
+    it re-searched under a degraded hardware model are priced on that
+    *calibrated* fabric, so the monitor expects the degraded cost and a
+    still-degraded link no longer reads as drift — only *new* movement
+    beyond the calibrated state re-flags.
+
+    Args:
+        plan: the installed ``TunedPlan`` (self-contained site metadata).
+        hardware: override profile; default is the plan's own.
+
+    Returns:
+        ``{site_id: seconds}`` for every comm site the plan carries.
+    """
     hw = hardware if hardware is not None else _lookup_hw(plan.hardware)
-    return {
-        sid: contention.comm_time(op, cfg, hw, compute_active=False)
-        for sid, _cls, op, cfg in _site_ops(plan)
-    }
+    calibration = (plan.lineage or {}).get("calibration", {})
+    out = {}
+    for sid, _cls, op, cfg in _site_ops(plan):
+        site_hw = hw
+        cal = calibration.get(sid)
+        if cal and cal.get("scale", 1.0) < 1.0:
+            site_hw = degraded_hardware(hw, float(cal["scale"]))
+        out[sid] = contention.comm_time(op, cfg, site_hw, compute_active=False)
+    return out
 
 
 class HealthMonitor:
     """Flag sites whose observed cost drifts beyond ``tolerance`` of the
-    prediction for ``window`` consecutive observations."""
+    prediction for ``window`` consecutive observations.
+
+    Args:
+        predicted: ``{site_id: seconds}`` baseline (typically
+            ``predicted_site_costs(plan)``).
+        tolerance: relative drift (``observed/predicted - 1``) that
+            counts as a drifted observation; must be > 0.
+        window: consecutive drifted observations before a site is
+            flagged (K of the K-consecutive detector); must be >= 1.
+
+    Raises:
+        ValueError: non-positive ``tolerance`` or ``window`` < 1.
+
+    Example — two drifted batches flag at window=2, exactly once::
+
+        >>> mon = HealthMonitor({"s": 1.0}, tolerance=0.25, window=2)
+        >>> mon.observe(0, {"s": 2.0})
+        []
+        >>> mon.observe(1, {"s": 2.0})
+        ['s']
+        >>> mon.observe(2, {"s": 2.0})   # already flagged: reported once
+        []
+        >>> mon.reset(); mon.unhealthy   # a plan swap re-arms the site
+        set()
+    """
 
     def __init__(
         self,

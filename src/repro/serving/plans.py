@@ -47,6 +47,7 @@ from repro.core.faults import parse_fault_schedule
 from repro.core.plan_repo import as_repository
 from repro.core.session import TunedPlan
 from repro.parallel import collectives as C
+from repro.serving.telemetry import SiteTelemetry
 
 DEFAULT_BAND = 0.5
 BAND_CAP = 2.0  # backoff ceiling: 3x shape deviation is already a re-tune
@@ -57,7 +58,32 @@ class PlanBinding:
     """Per-engine plan state; see module docstring.  ``parallel`` names the
     deployed topology the decode workload is rebuilt with for repository
     lookups (a ``ParallelPlan`` or a ``kind:degree`` spec string; degrees
-    of 1 still fingerprint, they just carry no comm sites)."""
+    of 1 still fingerprint, they just carry no comm sites).
+
+    Args:
+        cfg: the model config the engine serves.
+        plan: pinned plan — a ``TunedPlan``, a path to its JSON, or an
+            already-lowered runtime dict.
+        repo: a ``PlanRepository`` (or directory) re-resolved per shape.
+        hardware: profile name keying repository lookups.
+        parallel: deployed topology for workload rebuilds (see above).
+        band: shape tolerance for banded repository resolution.
+        max_seq: decode sequence length the workload is rebuilt at.
+
+    The live surfaces the engines and the retune loop read: ``current``
+    (the runtime plan decode is scoped under), ``stats`` (resolution
+    counters), ``events`` (structured drift/demotion/retune log),
+    ``demoted`` (site -> batch), ``telemetry`` (``SiteTelemetry`` ring of
+    observed per-site costs, one row per ``health_tick``) and
+    ``last_batch`` (the shape most recently resolved).
+
+    Example — an unbound binding resolves to "inherit ambient"::
+
+        >>> from repro.configs import get_smoke_config
+        >>> binding = PlanBinding(get_smoke_config("llama3-8b"))
+        >>> binding.bound, binding.resolve(4) is None, binding.last_batch
+        (False, True, 4)
+    """
 
     def __init__(
         self,
@@ -92,6 +118,8 @@ class PlanBinding:
         self._window = 3
         self._health = None
         self._telemetry = None
+        self.telemetry = SiteTelemetry()  # live observed-cost ring buffer
+        self.last_batch: Optional[int] = None  # shape last resolved at
         if plan is not None:
             self.set_plan(plan)
 
@@ -108,12 +136,22 @@ class PlanBinding:
 
     def set_plan(self, plan) -> None:
         """Hot-swap the pinned plan: a ``TunedPlan``, a path to its JSON,
-        an already-lowered runtime dict, or ``None`` (unpin)."""
+        an already-lowered runtime dict, or ``None`` (unpin).
+
+        Installing a fresh ``TunedPlan`` resets the drift flag state —
+        monitor, demotions and sticky fallbacks — so a site that drifts
+        again *after* the swap is re-flagged against the new plan's
+        predictions instead of being silently ignored forever.  (Repo
+        re-resolution through ``resolve`` deliberately does NOT reset:
+        a repo hit is the same operator intent, not a new plan decision.)
+        """
         if isinstance(plan, (str, os.PathLike)):
             plan = TunedPlan.load(plan)
         if isinstance(plan, TunedPlan):
             self._plan = plan
             self._health = self._telemetry = None  # re-arm on the new plan
+            self.demoted.clear()  # new plan: every site starts trusted and
+            self._fallbacks.clear()  # re-flaggable against new predictions
             rt = plan.runtime_plan()
         else:
             rt = plan
@@ -133,6 +171,7 @@ class PlanBinding:
         ``stats``); pinned plans are returned as-is.  Repeated misses
         widen the band with capped exponential backoff (logged to
         ``events``); a hit resets it to the configured band."""
+        self.last_batch = batch_size
         if self.repo is None:
             return self._rt
         wl = extract_decode_workload(
@@ -237,6 +276,9 @@ class PlanBinding:
         if not self._arm():
             return []
         observed = self._telemetry.observe(idx)
+        # live telemetry: one structured ring-buffer row per served batch —
+        # the observed-cost evidence the online re-tune loop calibrates from
+        self.telemetry.record(idx, observed, step_s=step_s)
         newly = [
             s
             for s in self._health.observe(idx, observed)

@@ -285,3 +285,83 @@ def test_parse_parallel_specs():
     assert pp.pp == 4 and pp.microbatches == 8
     with pytest.raises(ValueError, match="unknown parallel kind"):
         parse_parallel("zz:2")
+
+
+# ---------------------------------------------------------------------------
+# retune lineage: round-trips, chain walks, malformed-lineage quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_lineage_survives_json_round_trip(tmp_path):
+    from repro.core import TunedPlan, retune
+
+    wl = _decode_wl(batch=4)
+    parent = tune(wl, "tpu-v5e", method="lagom")
+    assert parent.lineage == {}  # a cold tune carries no lineage
+    child = retune(parent, wl, sites=None, telemetry=None)
+    path = str(tmp_path / "child.json")
+    child.save(path)
+    back = TunedPlan.load(path)
+    assert back == child
+    assert back.lineage["retuned_from"] == parent.artifact_digest()
+    assert back.lineage["chain"] == [parent.artifact_digest()]
+    assert back.artifact_digest() == child.artifact_digest()
+    # pre-lineage artifacts (the previous plan format) still load
+    doc = json.loads(child.to_json())
+    del doc["lineage"]
+    old = TunedPlan.from_json(json.dumps(doc))
+    assert old.lineage == {}
+
+
+def test_retune_chain_reconstruction(tmp_path):
+    from repro.core import retune
+
+    repo = PlanRepository(tmp_path)
+    wl = _decode_wl(batch=4)
+    parent = tune(wl, "tpu-v5e", method="lagom", repo=repo)
+    # a cold entry chains to itself; a missing key to nothing
+    assert repo.retune_chain(parent.fingerprint, "tpu-v5e") == [
+        parent.artifact_digest()
+    ]
+    assert repo.retune_chain("0" * 64, "tpu-v5e") == []
+    child = retune(parent, wl, repo=repo)
+    grand = retune(child, wl, repo=repo)
+    # put() advanced the same key in place; ancestors live only as the
+    # embedded chain digests, and the walk recovers all three generations
+    assert len(repo) == 1
+    assert repo.retune_chain(parent.fingerprint, "tpu-v5e") == [
+        grand.artifact_digest(),
+        child.artifact_digest(),
+        parent.artifact_digest(),
+    ]
+
+
+def test_retune_chain_quarantines_malformed_lineage(tmp_path):
+    import os
+
+    from repro.core import retune
+
+    repo = PlanRepository(tmp_path)
+    wl = _decode_wl(batch=4)
+    parent = tune(wl, "tpu-v5e", method="lagom", repo=repo)
+    child = retune(parent, wl, repo=repo)
+    path = repo.path_for(parent.fingerprint, "tpu-v5e")
+    # tamper: a chain whose head disagrees with retuned_from is exactly
+    # the inconsistency a hand-edited entry would introduce
+    with open(path) as f:
+        doc = json.load(f)
+    doc["lineage"]["chain"] = ["beef" * 16]
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.warns(RuntimeWarning, match="malformed"):
+        assert repo.retune_chain(parent.fingerprint, "tpu-v5e") == []
+    assert not os.path.exists(path)  # quarantined, same path as banded scans
+    assert os.path.exists(path + ".corrupt")
+    assert len(repo) == 0
+    # an unreadable entry quarantines through the walk too (PR 7's path)
+    repo.put(child)
+    with open(path, "w") as f:
+        f.write("{not json")
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        assert repo.retune_chain(parent.fingerprint, "tpu-v5e") == []
+    assert os.path.exists(path + ".corrupt")

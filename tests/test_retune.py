@@ -1,0 +1,566 @@
+"""The online re-tuning loop: the SiteTelemetry ring buffer, contention-
+model inversion (calibration), drift-scoped warm re-search (an order of
+magnitude fewer profiles than a cold tune under the same degradation),
+lineage provenance, RetuneService rate limiting, the set_plan flag-state
+reset, and the end-to-end drill — a mid-serve link degradation must be
+detected, warm re-tuned (scoped to the drifted groups), published with
+lineage and hot-swapped while generation completes with zero dropped
+tokens."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    ParallelPlan,
+    PlanRepository,
+    extract_decode_workload,
+    retune,
+    tune,
+)
+from repro.core import contention
+from repro.core.faults import FaultEvent, FaultSchedule, degraded_hardware
+from repro.core.hardware import PROFILES
+from repro.core.retune import (
+    RetuneService,
+    _calibrate_scale,
+    calibrate_sites,
+    retune_plan,
+)
+from repro.core.session import PlanMismatchError
+from repro.models import model as M
+from repro.parallel import collectives as C
+from repro.serving import SiteTelemetry, make_engine
+from repro.serving.plans import PlanBinding
+
+CFG = get_smoke_config("llama3-8b")  # 2 dense layers
+HW = PROFILES["tpu-v5e"]
+PP = ParallelPlan(kind="tp", tp=2)
+
+# every serve.layer0.* site degraded to 10% bandwidth from batch 2 on —
+# the same mid-serve drill test_serving_health runs, but layer-scoped so
+# the re-tune must touch groups {0, 1} and leave layer 1 alone
+DEGRADE_L0_AT_2 = FaultSchedule(
+    events=(FaultEvent("degrade", site="serve.layer0", scale=0.1, start=2),)
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan_state():
+    yield
+    C.install_runtime_plan({})
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return extract_decode_workload(CFG, PP, global_batch=32, seq=128)
+
+
+@pytest.fixture(scope="module")
+def lagom_plan(wl):
+    return tune(wl, "tpu-v5e", method="lagom")
+
+
+def _prompts(n, size=8):
+    rs = np.random.default_rng(0)
+    return [
+        rs.integers(0, CFG.vocab_size, size=size).astype(np.int32) for _ in range(n)
+    ]
+
+
+def _layer0_sites(wl):
+    return sorted(
+        op.site_id
+        for g in wl.groups
+        for op in g.comms
+        if op.site_id.startswith("serve.layer0")
+    )
+
+
+def _degraded_costs(plan, wl, sites, scale):
+    """What telemetry would observe for ``sites`` on a fabric running at
+    ``scale`` bandwidth under the plan's installed configs."""
+    deg = degraded_hardware(HW, scale)
+    out = {}
+    for gi, g in enumerate(wl.groups):
+        for ci, op in enumerate(g.comms):
+            if op.site_id in sites:
+                out[op.site_id] = contention.comm_time(
+                    op, plan.configs[(gi, ci)], deg, compute_active=False
+                )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SiteTelemetry: the bounded evidence ring
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_ring_evicts_oldest():
+    tel = SiteTelemetry(capacity=3)
+    for b in range(5):
+        tel.record(b, {"a": float(b)}, step_s=0.01 * b)
+    assert len(tel) == 3
+    assert [r["batch"] for r in tel.rows()] == [2, 3, 4]
+    assert tel.latest() == {"a": 4.0}
+    tel.clear()
+    assert len(tel) == 0 and tel.latest() == {}
+
+
+def test_telemetry_latest_skips_costless_rows():
+    tel = SiteTelemetry()
+    tel.record(0, {"a": 1.5})
+    tel.record(1, {})  # a batch served with health not yet armed
+    assert tel.latest() == {"a": 1.5}
+
+
+def test_telemetry_mean_windows_and_partial_sites():
+    tel = SiteTelemetry()
+    tel.record(0, {"a": 100.0})  # outside window=2
+    tel.record(1, {"a": 1.0, "b": 3.0})
+    tel.record(2, {"a": 3.0})  # b missing: averages over rows carrying it
+    m = tel.mean(window=2)
+    assert m["a"] == pytest.approx(2.0)
+    assert m["b"] == pytest.approx(3.0)
+    with pytest.raises(ValueError, match="window"):
+        tel.mean(window=0)
+    with pytest.raises(ValueError, match="capacity"):
+        SiteTelemetry(capacity=0)
+
+
+def test_telemetry_rows_are_copies():
+    tel = SiteTelemetry()
+    costs = {"a": 1.0}
+    tel.record(0, costs)
+    costs["a"] = 9.0  # caller mutation must not reach the buffer
+    assert tel.latest() == {"a": 1.0}
+    tel.rows()[0]["costs"]["a"] = 9.0
+    assert tel.latest() == {"a": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# calibration: inverting the contention model
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_scale_recovers_planted_degradation(wl, lagom_plan):
+    g = wl.groups[0]
+    op = g.comms[0]
+    cfg = lagom_plan.configs[(0, 0)]
+    for planted in (0.5, 0.1, 0.02):
+        observed = contention.comm_time(
+            op, cfg, degraded_hardware(HW, planted), compute_active=False
+        )
+        scale, predicted = _calibrate_scale(op, cfg, HW, observed)
+        assert scale == pytest.approx(planted, rel=1e-3)
+        assert predicted == pytest.approx(
+            contention.comm_time(op, cfg, HW, compute_active=False)
+        )
+
+
+def test_calibrate_scale_healthy_and_clamped(wl, lagom_plan):
+    op = wl.groups[0].comms[0]
+    cfg = lagom_plan.configs[(0, 0)]
+    healthy = contention.comm_time(op, cfg, HW, compute_active=False)
+    assert _calibrate_scale(op, cfg, HW, healthy * 0.5)[0] == 1.0
+    # an observation beyond what any modeled fabric could produce clamps
+    worst = contention.comm_time(
+        op, cfg, degraded_hardware(HW, 1e-3), compute_active=False
+    )
+    assert _calibrate_scale(op, cfg, HW, worst * 10)[0] == 1e-3
+
+
+def test_calibrate_sites_schedule_and_rows(wl, lagom_plan):
+    sites = _layer0_sites(wl)
+    observed = _degraded_costs(lagom_plan, wl, sites, 0.1)
+    cal, sched = calibrate_sites(lagom_plan, wl, observed, sites, HW)
+    assert sorted(cal) == sites
+    for sid in sites:
+        assert cal[sid]["scale"] == pytest.approx(0.1, rel=1e-3)
+        assert cal[sid]["observed"] > cal[sid]["predicted"]
+    assert sched is not None and len(sched.events) == len(sites)
+    assert all(ev.kind == "degrade" and ev.start == 0 for ev in sched.events)
+    # a healthy observation calibrates to scale 1.0 and emits no event
+    healthy_obs = _degraded_costs(lagom_plan, wl, sites, 1.0)
+    cal2, sched2 = calibrate_sites(lagom_plan, wl, healthy_obs, sites, HW)
+    assert sched2 is None
+    assert all(row["scale"] == 1.0 for row in cal2.values())
+    # sites without evidence are skipped, unknown sites refused
+    cal3, _ = calibrate_sites(lagom_plan, wl, {}, sites, HW)
+    assert cal3 == {}
+    with pytest.raises(ValueError, match="unknown drift site"):
+        calibrate_sites(lagom_plan, wl, observed, ["serve.ghost"], HW)
+
+
+# ---------------------------------------------------------------------------
+# drift-scoped warm re-tune: scope, cost, quality, lineage
+# ---------------------------------------------------------------------------
+
+
+def test_retune_scopes_to_drifted_groups(wl, lagom_plan):
+    sites = _layer0_sites(wl)
+    observed = _degraded_costs(lagom_plan, wl, sites, 0.1)
+    child = retune_plan(lagom_plan, wl, sites=sites, telemetry=observed)
+    assert child.lineage["groups"] == [0, 1]  # layer 0's attn + mlp groups
+    assert child.lineage["sites"] == sites
+    # untouched groups keep the parent's configs verbatim
+    for (gi, ci), cfg in lagom_plan.configs.items():
+        if gi not in (0, 1):
+            assert child.configs[(gi, ci)] == cfg
+    # the drifted groups actually moved off the healthy-fabric optimum
+    assert any(
+        child.configs[(gi, ci)] != lagom_plan.configs[(gi, ci)]
+        for gi in (0, 1)
+        for ci in range(len(wl.groups[gi].comms))
+    )
+    # the calibration schedule rides along as provenance
+    sched = FaultSchedule.from_dict(child.faults["calibrated"])
+    assert {ev.site for ev in sched.events} == set(sites)
+
+
+def test_retune_profiles_under_quarter_of_cold_tune(wl, lagom_plan):
+    """The acceptance bar: a scoped warm re-tune must cost < 25% of the
+    ProfileTime calls a cold full tune needs on the same degraded fabric,
+    while landing on a plan of the same quality."""
+    sites = _layer0_sites(wl)
+    observed = _degraded_costs(lagom_plan, wl, sites, 0.1)
+    child = retune_plan(lagom_plan, wl, sites=sites, telemetry=observed)
+    sched = FaultSchedule.from_dict(child.faults["calibrated"])
+    cold = tune(wl, "tpu-v5e", method="lagom", faults=sched)
+    assert child.profile_count > 0
+    assert child.profile_count < 0.25 * cold.profile_count
+    # same-quality check: price both plans' layer-0 groups on the
+    # calibrated (degraded) simulator — warm must be within 10% of cold
+    from repro.core.simulator import Simulator
+
+    sim = Simulator(HW, faults=sched)
+    for gi in (0, 1):
+        g = wl.groups[gi]
+        warm_z = sim.profile_group(
+            g, [child.configs[(gi, ci)] for ci in range(len(g.comms))]
+        ).Z
+        cold_z = sim.profile_group(
+            g, [cold.configs[(gi, ci)] for ci in range(len(g.comms))]
+        ).Z
+        assert warm_z <= cold_z * 1.10
+
+
+def test_retune_lineage_chain_and_repo_publish(tmp_path, wl, lagom_plan):
+    repo = PlanRepository(tmp_path)
+    repo.put(lagom_plan)
+    sites = _layer0_sites(wl)
+    observed = _degraded_costs(lagom_plan, wl, sites, 0.1)
+    child = retune(lagom_plan, wl, sites=sites, telemetry=observed, repo=repo)
+    assert child.lineage["retuned_from"] == lagom_plan.artifact_digest()
+    assert child.lineage["generation"] == 1
+    assert child.lineage["chain"] == [lagom_plan.artifact_digest()]
+    # the repo entry advanced in place: same key, child content
+    stored = repo.get(lagom_plan.fingerprint, "tpu-v5e")
+    assert stored.artifact_digest() == child.artifact_digest()
+    # grandchild: chain grows newest-parent-first
+    observed2 = _degraded_costs(child, wl, sites, 0.05)
+    grand = retune(child, wl, sites=sites, telemetry=observed2, repo=repo)
+    assert grand.lineage["generation"] == 2
+    assert grand.lineage["chain"] == [
+        child.artifact_digest(),
+        lagom_plan.artifact_digest(),
+    ]
+    assert repo.retune_chain(lagom_plan.fingerprint, "tpu-v5e") == [
+        grand.artifact_digest(),
+        child.artifact_digest(),
+        lagom_plan.artifact_digest(),
+    ]
+
+
+def test_retune_refuses_mismatched_workload_and_unknown_sites(wl, lagom_plan):
+    other = extract_decode_workload(CFG, PP, global_batch=4, seq=32)
+    with pytest.raises(PlanMismatchError):
+        retune(lagom_plan, other)
+    with pytest.raises(ValueError, match="unknown drift site"):
+        retune(lagom_plan, wl, sites=["serve.ghost.ar"])
+
+
+def test_retune_accepts_telemetry_buffer(wl, lagom_plan):
+    sites = _layer0_sites(wl)
+    tel = SiteTelemetry()
+    tel.record(7, _degraded_costs(lagom_plan, wl, sites, 0.1))
+    child = retune(lagom_plan, wl, sites=sites, telemetry=tel)
+    for sid in sites:
+        assert child.lineage["calibration"][sid]["scale"] == pytest.approx(
+            0.1, rel=1e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# RetuneService: rate limits, declines, report
+# ---------------------------------------------------------------------------
+
+
+def _bound_binding(plan):
+    b = PlanBinding(CFG, plan=plan, parallel="tp:2", max_seq=128)
+    b.last_batch = 32
+    return b
+
+
+def test_service_declines_without_plan_or_sites(lagom_plan):
+    svc = RetuneService(PlanBinding(CFG))
+    assert svc.handle(["serve.layer0.attn.ar"]) is None  # unbound binding
+    svc2 = RetuneService(_bound_binding(lagom_plan))
+    assert svc2.handle([]) is None
+    assert svc2.history == []  # empty site list isn't even logged
+
+
+def test_service_budget_and_interval(wl, lagom_plan):
+    b = _bound_binding(lagom_plan)
+    sites = _layer0_sites(wl)
+    b.telemetry.record(0, _degraded_costs(lagom_plan, wl, sites, 0.1))
+    svc = RetuneService(b, max_retunes=1, interval=4)
+    assert svc.handle(sites) is not None
+    assert svc.retunes == 1
+    # budget of 1 is spent: the next flag declines and logs why
+    assert svc.handle(sites) is None
+    assert svc.history[-1]["event"] == "retune_skipped"
+    assert "budget" in svc.history[-1]["reason"]
+    # interval declines come before the budget is consulted a second time
+    b2 = _bound_binding(lagom_plan)
+    b2.telemetry.record(0, _degraded_costs(lagom_plan, wl, sites, 0.1))
+    svc2 = RetuneService(b2, max_retunes=8, interval=1000)
+    assert svc2.handle(sites) is not None
+    assert svc2.handle(sites) is None
+    assert "interval" in svc2.history[-1]["reason"]
+    with pytest.raises(ValueError, match="interval"):
+        RetuneService(b, interval=0)
+    with pytest.raises(ValueError, match="max_retunes"):
+        RetuneService(b, max_retunes=0)
+
+
+def test_service_drift_threshold_floor(wl, lagom_plan):
+    from repro.serving.health import HealthMonitor
+
+    b = _bound_binding(lagom_plan)
+    sites = _layer0_sites(wl)
+    mon = HealthMonitor({s: 1.0 for s in sites}, tolerance=0.25, window=1)
+    mon.observe(0, {s: 1.5 for s in sites})  # 50% drift
+    b.attach_health(mon, None)
+    svc = RetuneService(b, drift_threshold=2.0)
+    assert svc.handle(sites) is None
+    assert "below threshold" in svc.history[-1]["reason"]
+    assert "declined" in svc.report()
+
+
+def test_service_report_lines(wl, lagom_plan):
+    b = _bound_binding(lagom_plan)
+    sites = _layer0_sites(wl)
+    b.telemetry.record(0, _degraded_costs(lagom_plan, wl, sites, 0.1))
+    svc = RetuneService(b)
+    assert "armed, 0 re-tunes" in svc.report()
+    svc.handle(sites)
+    rep = svc.report()
+    assert "1 re-tune(s)" in rep and "generation 1" in rep
+
+
+# ---------------------------------------------------------------------------
+# set_plan resets drift flag state (the once-per-install fix)
+# ---------------------------------------------------------------------------
+
+
+def test_set_plan_resets_monitor_and_fallbacks(wl, lagom_plan):
+    b = PlanBinding(CFG, plan=lagom_plan, parallel="tp:2", max_seq=128)
+    b.attach_faults(DEGRADE_L0_AT_2, tolerance=0.25, window=1)
+    for i in range(3):
+        drifted = b.health_tick()
+        if drifted:
+            break
+    assert drifted and all(s.startswith("serve.layer0") for s in drifted)
+    b.demote(drifted)
+    assert b.demoted and b._fallbacks
+    # hot-swapping a fresh TunedPlan must re-arm the detector: demotions
+    # and sticky fallbacks clear, and the same site is re-flaggable
+    # against the new plan's predictions instead of ignored forever
+    child = retune_plan(
+        lagom_plan,
+        wl,
+        sites=drifted,
+        telemetry=_degraded_costs(lagom_plan, wl, drifted, 0.1),
+    )
+    b.set_plan(child)
+    assert b.demoted == {} and b._fallbacks == {}
+    assert b._health is None  # lazily rebuilt on the next tick
+    # repo re-resolution, by contrast, keeps the flag state sticky
+    # (test_demoted_fallbacks_survive_repo_re_resolution covers it)
+
+
+def test_set_plan_reflags_after_swap(lagom_plan):
+    """Regression: before the reset, a site that drifted again after a
+    set_plan hot-swap was never re-flagged (the monitor's reported set
+    survived the swap)."""
+    b = PlanBinding(CFG, plan=lagom_plan, parallel="tp:2", max_seq=128)
+    b.attach_faults(
+        FaultSchedule(
+            events=(FaultEvent("degrade", site="serve", scale=0.1, start=0),)
+        ),
+        tolerance=0.25,
+        window=1,
+    )
+    first = b.health_tick()
+    assert first  # flagged immediately (window=1, fault from batch 0)
+    b.set_plan(lagom_plan)  # swap (same artifact is fine: state must reset)
+    b.attach_faults(
+        FaultSchedule(
+            events=(FaultEvent("degrade", site="serve", scale=0.1, start=0),)
+        ),
+        tolerance=0.25,
+        window=1,
+    )
+    assert b.health_tick() == first  # re-flagged, not silently ignored
+
+
+# ---------------------------------------------------------------------------
+# end-to-end drill: degrade -> detect -> warm re-tune -> hot-swap -> recover
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_engine_retunes_mid_generate(tmp_path, params, wl, lagom_plan):
+    repo = PlanRepository(tmp_path)
+    repo.put(lagom_plan)
+    eng = make_engine(
+        CFG,
+        params,
+        mode="fixed",
+        batch_size=32,
+        max_seq=128,
+        plan=lagom_plan,
+        plan_parallel="tp:2",
+        fault_schedule=DEGRADE_L0_AT_2,
+        health_window=2,
+        health_tolerance=0.25,
+        retune=dict(repo=repo),
+    )
+    outs = eng.generate(_prompts(32), max_new=8)
+    assert all(len(o) == 8 for o in outs)  # zero dropped tokens
+
+    kinds = [e["event"] for e in eng.health_events]
+    assert "drift" in kinds and "retune" in kinds
+    assert "demotion" not in kinds  # the re-tune preempted demotion
+    assert eng._binding.demoted == {}
+    ev = next(e for e in eng.health_events if e["event"] == "retune")
+    # fault starts at batch 2; window=2 flags on the second drifted batch
+    assert ev["batch"] == 4
+    assert ev["groups"] == [0, 1]  # drift-scoped: layer 1 untouched
+    assert ev["generation"] == 1 and ev["published"]
+    assert sorted(ev["sites"]) == _layer0_sites(wl)
+
+    # the swap hot-installed the child (a different artifact; whether it
+    # retraces depends on whether the lowered knobs moved — the compiled
+    # cache keys on the runtime digest either way), and the monitor did
+    # not re-flag: calibrated predictions price the degraded fabric
+    new = eng._binding._plan
+    assert new.artifact_digest() != lagom_plan.artifact_digest()
+    assert new.lineage["retuned_from"] == lagom_plan.artifact_digest()
+    assert sum(1 for k in kinds if k == "drift") == 1
+    # published: the repo entry advanced to the retuned child
+    assert repo.get(lagom_plan.fingerprint, "tpu-v5e").lineage
+    # recovery: under the calibrated fabric the retuned plan beats the
+    # stale parent's makespan on the drifted groups
+    from repro.core.simulator import Simulator
+
+    sched = FaultSchedule.from_dict(new.faults["calibrated"])
+    sim = Simulator(HW, faults=sched)
+    for gi in ev["groups"]:
+        g = wl.groups[gi]
+        stale = sim.profile_group(
+            g, [lagom_plan.configs[(gi, ci)] for ci in range(len(g.comms))]
+        ).Z
+        tuned = sim.profile_group(
+            g, [new.configs[(gi, ci)] for ci in range(len(g.comms))]
+        ).Z
+        assert tuned < stale
+    assert "re-tune(s)" in eng.retune_service.report()
+
+
+def test_continuous_engine_retunes_between_ticks(params, wl, lagom_plan):
+    from repro.serving import Request
+
+    eng = make_engine(
+        CFG,
+        params,
+        mode="continuous",
+        slots=32,
+        max_seq=128,
+        plan=lagom_plan,
+        plan_parallel="tp:2",
+        fault_schedule=DEGRADE_L0_AT_2,
+        health_window=2,
+        health_tolerance=0.25,
+        retune=True,
+    )
+    for i, p in enumerate(_prompts(32)):
+        eng.submit(Request(rid=i, prompt=p, max_new=8))
+    done = eng.run()
+    assert len(done) == 32 and all(len(r.out) == 8 for r in done)
+    kinds = [e["event"] for e in eng.health_events]
+    assert "retune" in kinds and "demotion" not in kinds
+    assert eng._binding.demoted == {}
+    assert eng.retune_service.retunes == 1
+    assert len(eng.telemetry) > 0  # the ring buffer saw every tick
+
+
+def test_engine_demotes_when_budget_spent(params, lagom_plan):
+    """The fallback chain: a declining service (budget 0 left after one
+    publish, faults persist) hands drift back to demotion."""
+    # degrade *everything* but let the service do at most one re-tune;
+    # window=1 so the second layer's drift (if calibration on layer0
+    # somehow missed it) falls back to demote... here the whole plan is
+    # degraded at once, one retune handles all sites, so force declines
+    # by exhausting the budget with interval=1000 instead.
+    eng = make_engine(
+        CFG,
+        params,
+        mode="fixed",
+        batch_size=32,
+        max_seq=128,
+        plan=lagom_plan,
+        plan_parallel="tp:2",
+        fault_schedule=FaultSchedule(
+            events=(
+                FaultEvent("degrade", site="serve.layer0", scale=0.1, start=2),
+                FaultEvent("degrade", site="serve.layer1", scale=0.1, start=8),
+            )
+        ),
+        health_window=2,
+        health_tolerance=0.25,
+        retune=dict(max_retunes=1),
+    )
+    outs = eng.generate(_prompts(32), max_new=12)
+    assert all(len(o) == 12 for o in outs)
+    kinds = [e["event"] for e in eng.health_events]
+    # first drift re-tuned; the later layer-1 drift found the budget
+    # spent, was logged as skipped, and demoted instead
+    assert "retune" in kinds and "retune_skipped" in kinds
+    assert "demotion" in kinds
+    skip = next(e for e in eng.health_events if e["event"] == "retune_skipped")
+    assert "budget" in skip["reason"]
+    assert any(s.startswith("serve.layer1") for s in eng._binding.demoted)
+
+
+def test_serve_launcher_retune_flag(tmp_path, capsys, wl, lagom_plan):
+    from repro.launch import serve
+
+    path = str(tmp_path / "plan.json")
+    lagom_plan.save(path)
+    argv = ["--arch", "llama3-8b", "--smoke", "--batch", "32"]
+    argv += ["--prompt-len", "8", "--max-new", "8", "--max-seq", "128"]
+    argv += ["--tuned-plan", path, "--plan-parallel", "tp:2"]
+    argv += ["--fault-schedule", "degrade,site=serve.layer0,scale=0.1,start=2"]
+    argv += ["--health-window", "2", "--health-tolerance", "0.25"]
+    argv += ["--retune", "--retune-max", "2"]
+    serve.main(argv)
+    out = capsys.readouterr().out
+    assert "retune: 1 re-tune(s)" in out
+    assert "0 site(s) demoted" in out  # health line: re-tune preempted demote
