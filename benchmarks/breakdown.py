@@ -6,12 +6,12 @@ speedups (paper: AutoCCL 0.87×, Lagom 1.35× / 1.43×)."""
 from __future__ import annotations
 
 from repro.configs import get_config
-from repro.core import (A40_NVLINK, ParallelPlan, Simulator, Workload,
+from repro.core import (ParallelPlan, Simulator, Workload, by_name,
                         extract_workload, tune)
 
 
 def run():
-    hw = A40_NVLINK
+    hw = by_name("a40-nvlink")
     cfg = get_config("phi2-2b")
     wl = extract_workload(cfg, ParallelPlan(kind="fsdp", dp=8), seq=2048,
                           global_batch=16)

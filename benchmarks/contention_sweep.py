@@ -4,13 +4,13 @@ the paper's two anchors: comm-equal configs with ≫ different comp times,
 and the +30% comp slowdown from NC 16→32."""
 from __future__ import annotations
 
-from repro.core import A40_PCIE, CommConfig
+from repro.core import CommConfig, by_name
 from repro.core import contention as C
 from repro.core.workload import CommOp, matmul_comp
 
 
 def run():
-    hw = A40_PCIE
+    hw = by_name("a40-pcie")
     ffn = matmul_comp("ffn", 4096, 2560, 10240)       # the paper's FFN op
     ar = CommOp("ar32mb", "allreduce", 32e6, 8)
     rows = []

@@ -3,7 +3,7 @@ communications — Lagom's profile count grows linearly (≈2× AutoCCL's
 single-comm count for a 2-comm overlap, per the paper)."""
 from __future__ import annotations
 
-from repro.core import A40_NVLINK, Workload, tune
+from repro.core import Workload, by_name, tune
 from repro.core.workload import CommOp, OverlapGroup, matmul_comp
 
 
@@ -19,8 +19,9 @@ def run():
     rows = []
     for n in (1, 2, 4, 8):
         wl = Workload(f"g{n}", [_group(n)])
-        lag = tune(wl, A40_NVLINK, noise=0.01, seed=0)
-        ac = tune(wl, A40_NVLINK, method="autoccl", noise=0.01, seed=1)
+        hw = by_name("a40-nvlink")
+        lag = tune(wl, hw, noise=0.01, seed=0)
+        ac = tune(wl, hw, method="autoccl", noise=0.01, seed=1)
         rows.append(dict(table="fig8c", n_comms=n,
                          lagom_iters=lag.profile_count,
                          autoccl_iters=ac.profile_count,

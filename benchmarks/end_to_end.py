@@ -5,7 +5,7 @@ defaults / AutoCCL / Lagom."""
 from __future__ import annotations
 
 from repro.configs import get_config
-from repro.core import (A40_NVLINK, A40_PCIE, ParallelPlan, Simulator,
+from repro.core import (ParallelPlan, Simulator, by_name,
                         extract_workload, tune)
 
 # (model, plan, seq, global_batch) — Table 2
@@ -58,7 +58,7 @@ def _bench(model, plan, seq, gbs, hw, layers=None):
 def run(fast: bool = False):
     rows = []
     layers = 8 if fast else None
-    for hw in (A40_NVLINK, A40_PCIE):
+    for hw in (by_name("a40-nvlink"), by_name("a40-pcie")):
         for model, plan, seq, gbs in FSDP_WORKLOADS:
             r = _bench(model, plan, seq, gbs, hw, layers)
             r["table"] = "fig7a"

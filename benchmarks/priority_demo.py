@@ -3,7 +3,7 @@ communication's NC from 1→16 yields different comm-gain/comp-cost
 trade-offs — the motivation for metric H."""
 from __future__ import annotations
 
-from repro.core import A40_PCIE, CommConfig, Simulator
+from repro.core import CommConfig, Simulator, by_name
 from repro.core.priority import metric_h
 from repro.core.workload import CommOp, OverlapGroup, matmul_comp
 
@@ -17,7 +17,7 @@ def _group():
 
 
 def run():
-    hw = A40_PCIE
+    hw = by_name("a40-pcie")
     sim = Simulator(hw)
     g = _group()
     base_cfgs = [CommConfig(nc=2, chunk_kb=512), CommConfig(nc=2, chunk_kb=512)]

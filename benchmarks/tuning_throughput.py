@@ -42,7 +42,7 @@ import time
 from functools import partial
 
 from repro.configs import get_config
-from repro.core import ParallelPlan, Simulator, TPU_V5E, extract_workload
+from repro.core import ParallelPlan, Simulator, by_name, extract_workload
 from repro.core import autoccl, tuner
 
 
@@ -104,7 +104,7 @@ def _workloads(fast: bool):
 
 
 def run(fast: bool = False, seed: int = 0, noisy: bool = True):
-    hw = TPU_V5E
+    hw = by_name("tpu-v5e")
     reps = 2 if fast else 5
     floor = 1.3 if fast else 2.0
     rows = []

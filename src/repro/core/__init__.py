@@ -2,7 +2,10 @@
 
   comm_params — the six tunable collective parameters (s_j)
   workload    — overlap-group IR (CompOp / CommOp / OverlapGroup)
-  hardware    — cluster profiles (A40-PCIe, A40-NVLink, TPU v5e)
+  hardware    — cluster profiles (A40-PCIe, A40-NVLink, TPU v5e) + the
+                named-profile registry (by_name / profiles)
+  topology    — hierarchical fabric model: N pods of a Hardware island
+                joined by a named inter-pod fabric (HierarchicalHardware)
   contention  — Eqs. 4–6 + communication-time model
   cost_model  — Eqs. 1–3 closed form
   simulator   — event-driven ProfileTime oracle
@@ -28,8 +31,13 @@ from repro.core.extract import (ParallelPlan, extract_decode_workload,
                                 extract_workload, parse_parallel)
 from repro.core.faults import (FaultEvent, FaultSchedule,
                                parse_fault_schedule)
-from repro.core.hardware import A40_NVLINK, A40_PCIE, PROFILES, TPU_V5E, Hardware
+from repro.core.hardware import (A40_NVLINK, A40_PCIE, PROFILES, TPU_V5E,
+                                 Hardware, by_name, profiles,
+                                 register_profile)
 from repro.core.plan_repo import PlanRepoError, PlanRepository
+from repro.core.topology import (FABRICS, Fabric, HierarchicalHardware,
+                                 fabric_by_name, flat, hierarchical,
+                                 resolve_topology, two_pod)
 from repro.core.session import (PlanMismatchError, SearchBackend,
                                 SearchOutcome, TunedPlan, available_methods,
                                 register_backend,
@@ -51,6 +59,9 @@ __all__ = [
     "ParallelPlan", "extract_decode_workload", "extract_workload",
     "parse_parallel",
     "Hardware", "A40_PCIE", "A40_NVLINK", "TPU_V5E", "PROFILES",
+    "by_name", "profiles", "register_profile",
+    "Fabric", "FABRICS", "fabric_by_name", "HierarchicalHardware",
+    "flat", "hierarchical", "two_pod", "resolve_topology",
     "Simulator", "Measurement",
     "FaultEvent", "FaultSchedule", "parse_fault_schedule",
     "CompOp", "CommOp", "OverlapGroup", "Workload",

@@ -88,9 +88,11 @@ def comm_time(op: CommOp, cfg: CommConfig, hw: Hardware, *,
     nt_adj = 1.0 - 0.004 * (cfg.nt - 64) / 576.0          # negligible, by design
     n_steps = max(2, op.group_size) - 1 if cfg.algorithm == "ring" else \
         max(1, int(math.log2(max(2, op.group_size))))
+    # per-step cost: the fixed 1µs algorithm-step overhead plus the fabric's
+    # hop latency (0 pod-local; cross-pod RTT on core.topology inter tiers)
     latency = (hw.launch_us + 0.5 * cfg.nc                 # per-channel setup
                + n_chunks * hw.chunk_us * chunk_mult * nt_adj
-               + n_steps * 1.0) * 1e-6
+               + n_steps * (1.0 + hw.hop_us)) * 1e-6
     return latency + wb / bw
 
 
@@ -176,7 +178,7 @@ def comm_time_v(op_bytes, wb, n_steps, nc, nt, chunk_kb, proto_ceiling,
     nt_adj = 1.0 - 0.004 * (nt - 64) / 576.0
     latency = (hw.launch_us + 0.5 * nc
                + n_chunks * hw.chunk_us * proto_chunk_mult * nt_adj
-               + n_steps * 1.0) * 1e-6
+               + n_steps * (1.0 + hw.hop_us)) * 1e-6
     return latency + wb / bw
 
 

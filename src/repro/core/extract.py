@@ -30,10 +30,23 @@ class ParallelPlan:
     pp: int = 1        # pipeline stages
     microbatches: int = 2      # Domino / dual-batch pipelining depth
     dsize: int = 2             # bytes per element (bf16)
+    # hierarchical-fabric axes (core.topology): ``pods`` replicas of the
+    # plan's island joined by a slow inter-pod fabric.  ``accum_steps`` > 1
+    # turns on ACCO-style gradient accumulation — per-layer groups shrink
+    # to one microbatch and ``acc.step{k}`` groups hide microbatch k's grad
+    # reduce under microbatch k+1's compute.  ``outer_frags`` > 0 (with
+    # pods > 1) adds Streaming-DiLoCo ``outer.round{r}.sync.frag{f}``
+    # groups: fragment-streamed cross-pod parameter sync hidden under the
+    # next inner iteration's compute.
+    pods: int = 1
+    accum_steps: int = 1
+    outer_frags: int = 0
+    outer_rounds: int = 1
 
     @property
     def world(self) -> int:
-        return max(self.dp, 1) * max(self.tp, 1) * max(self.ep, 1)
+        return max(self.dp, 1) * max(self.tp, 1) * max(self.ep, 1) \
+            * max(self.pods, 1)
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +117,11 @@ def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
         seq_q = 1
     else:
         seq_q = seq
-    batch_local = max(1, global_batch // max(1, plan.dp))
+    # under gradient accumulation the per-layer groups describe ONE
+    # microbatch (1/accum_steps of the local batch); the other microbatches
+    # live in the aggregated ``acc.step{k}`` groups appended below
+    accum = max(1, plan.accum_steps) if not decode else 1
+    batch_local = max(1, global_batch // max(1, plan.dp) // accum)
     m = batch_local * seq_q
     groups: List[OverlapGroup] = []
 
@@ -121,12 +138,15 @@ def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
         if not decode:
             bcomp = _scale(comp, 2.0, ".bwd")
             for i in range(L):
+                comms = [CommOp(f"ag.L{i - 1}", "allgather", pbytes, n,
+                                site=f"fsdp.layer{i - 1}.ag_params.bwd")]
+                if accum == 1:
+                    # with accumulation, grads stay local per layer and the
+                    # whole-model reduce moves to the acc.step{k} groups
+                    comms.append(CommOp(f"rs.L{i}", "reducescatter", pbytes,
+                                        n, site=f"fsdp.layer{i}.rs_grads"))
                 groups.append(OverlapGroup(
-                    f"bwd.L{i}", comps=list(bcomp),
-                    comms=[CommOp(f"ag.L{i - 1}", "allgather", pbytes, n,
-                                  site=f"fsdp.layer{i - 1}.ag_params.bwd"),
-                           CommOp(f"rs.L{i}", "reducescatter", pbytes, n,
-                                  site=f"fsdp.layer{i}.rs_grads")]))
+                    f"bwd.L{i}", comps=list(bcomp), comms=comms))
 
     elif plan.kind == "tp":
         n = plan.tp
@@ -200,10 +220,71 @@ def extract_workload(cfg, plan: ParallelPlan, *, seq: int, global_batch: int,
     else:
         raise ValueError(plan.kind)
 
+    meta = {"seq": seq, "global_batch": global_batch}
+
+    # -- ACCO gradient-accumulation overlap (acc.step{k} site class) -------
+    # One microbatch's aggregate compute (the per-layer groups above are
+    # exactly one microbatch when accum > 1), measured before acc/outer
+    # groups are appended.
+    mb_flops = sum(c.flops for g in groups for c in g.comps)
+    mb_bytes = sum(c.bytes_rw for g in groups for c in g.comps)
+    mb_tbs = sum(c.threadblocks for g in groups for c in g.comps)
+    # a ``layers=`` trim scales the per-layer compute groups above, so the
+    # whole-model reduce payloads scale with it too — otherwise a trimmed
+    # workload's acc/outer groups price a 32-layer reduce against 4 layers
+    # of compute
+    param_bytes = cfg.param_count() * dsize * L / max(1, cfg.num_layers)
+    shards = {"fsdp": plan.dp, "tp": plan.tp, "ep": plan.ep,
+              "pp": plan.pp}[plan.kind]
+    owned_bytes = param_bytes / max(1, shards)   # per-chip parameter shard
+
+    if accum > 1:
+        for k in range(accum):
+            comms = []
+            if plan.kind == "fsdp" and plan.dp > 1:
+                # microbatch k's whole-model grad reduce across the pod-local
+                # dp axis (replaces the per-layer rs_grads dropped above)
+                comms.append(CommOp(
+                    f"rs.grads.s{k}", "reducescatter", param_bytes, plan.dp,
+                    site=f"acc.step{k}.rs_grads"))
+            if plan.pods > 1:
+                # the owned shard then reduces across pods on the slow tier
+                comms.append(CommOp(
+                    f"ar.grads.s{k}", "allreduce", owned_bytes, plan.pods,
+                    site=f"acc.step{k}.ar_grads", tier="inter"))
+            # hidden under microbatch k+1's compute; the last step has no
+            # next microbatch — its reduce is the exposed tail
+            comps = [] if k == accum - 1 else [
+                CompOp(f"acc.mb{k + 1}.compute", mb_flops, mb_bytes,
+                       max(1, mb_tbs))]
+            groups.append(OverlapGroup(f"acc.step{k}", comps=comps,
+                                       comms=comms))
+        meta["accum_steps"] = float(accum)
+
+    # -- Streaming-DiLoCo outer-loop sync (outer.round{r} site class) ------
+    if plan.outer_frags > 0 and plan.pods > 1 and not decode:
+        frags = plan.outer_frags
+        frag_bytes = owned_bytes / frags
+        iter_flops = mb_flops * accum            # one full inner iteration
+        iter_bytes = mb_bytes * accum
+        iter_tbs = mb_tbs * accum
+        for r in range(max(1, plan.outer_rounds)):
+            groups.append(OverlapGroup(
+                f"outer.round{r}",
+                comps=[CompOp(f"outer.r{r}.inner_iter", iter_flops,
+                              iter_bytes, max(1, iter_tbs))],
+                comms=[CommOp(f"outer.sync.r{r}.f{f}", "allreduce",
+                              frag_bytes, plan.pods,
+                              site=f"outer.round{r}.sync.frag{f}",
+                              tier="inter")
+                       for f in range(frags)]))
+        meta["outer_frags"] = float(frags)
+    if plan.pods > 1:
+        meta["pods"] = float(plan.pods)
+
     total_flops = sum(g.total_flops for g in groups)
-    return Workload(name=f"{cfg.name}:{plan.kind}", groups=groups,
-                    meta={"flops": total_flops, "seq": seq,
-                          "global_batch": global_batch})
+    meta["flops"] = total_flops
+    return Workload(name=f"{cfg.name}:{plan.kind}", groups=groups, meta=meta)
 
 
 def extract_decode_workload(cfg, plan: ParallelPlan, *, global_batch: int,

@@ -8,7 +8,9 @@ concurrent DMA streams that consume slots + HBM bandwidth.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import json
+from dataclasses import dataclass, fields
+from typing import Dict, List
 
 
 @dataclass(frozen=True)
@@ -31,10 +33,34 @@ class Hardware:
     # stalling compute pipelines by up to ``interference_gamma``.
     cache_kb: int = 6144
     interference_gamma: float = 0.35
+    # per-algorithm-step fabric latency (µs) on top of the fixed 1µs step
+    # cost — 0 on pod-local fabrics; the pod-joining tiers of
+    # ``core.topology`` carry their cross-pod RTT here.
+    hop_us: float = 0.0
 
     @property
     def achieved_flops(self) -> float:
         return self.peak_flops * self.gemm_eff
+
+    # -- serialization (named-profile registry round-trip) -----------------
+    def to_dict(self) -> Dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Hardware":
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown Hardware fields {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        return cls(**d)
+
+    def to_json(self, *, indent=2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, allow_nan=False)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Hardware":
+        return cls.from_dict(json.loads(text))
 
 
 # Calibration anchors (paper Fig. 3, 8×A40): with λ=84 SMs and one resident
@@ -87,3 +113,42 @@ TPU_V5E = Hardware(
 )
 
 PROFILES = {h.name: h for h in (A40_PCIE, A40_NVLINK, TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# named-profile registry: launchers, fault specs and --plan-hardware resolve
+# profiles by name instead of importing module constants
+# ---------------------------------------------------------------------------
+
+def by_name(name: str) -> Hardware:
+    """The registered profile called ``name`` — the one lookup every
+    by-name surface (``session.tune(workload, "tpu-v5e")``, the launchers'
+    ``--plan-hardware``, benchmark hardware columns) goes through.
+
+    Raises:
+        KeyError: unknown name; the message lists ``profiles()``.
+    """
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown hardware profile {name!r}; registered: "
+                       f"{profiles()}") from None
+
+
+def profiles() -> List[str]:
+    """Sorted names of every registered profile."""
+    return sorted(PROFILES)
+
+
+def register_profile(hw: Hardware, *, overwrite: bool = False) -> Hardware:
+    """Add ``hw`` to the registry under ``hw.name`` (refusing silent
+    replacement unless ``overwrite=True``); returns ``hw`` so custom
+    profiles register inline::
+
+        hw = register_profile(Hardware(name="my-pod", ...))
+    """
+    if hw.name in PROFILES and not overwrite:
+        raise ValueError(f"hardware profile {hw.name!r} already registered "
+                         "(pass overwrite=True to replace it)")
+    PROFILES[hw.name] = hw
+    return hw

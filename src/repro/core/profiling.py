@@ -109,11 +109,14 @@ _TINY = 1e-12                       # head-completion epsilon (matches run_group
 
 def group_fingerprint(g: OverlapGroup) -> Tuple:
     """Structural identity of a group for caching: everything the contention
-    model reads, nothing it doesn't (names excluded)."""
+    model reads, nothing it doesn't (names excluded).  A comm's fabric tier
+    joins the key only when set — it selects the pricing hardware under a
+    hierarchical topology — so pre-topology fingerprints stay stable."""
     return (
         tuple((c.flops, c.bytes_rw, c.threadblocks, c.tb_per_slot,
                c.bytes_per_tb) for c in g.comps),
-        tuple((c.kind, c.bytes, c.group_size) for c in g.comms),
+        tuple((c.kind, c.bytes, c.group_size) + ((c.tier,) if c.tier else ())
+              for c in g.comms),
     )
 
 

@@ -51,9 +51,10 @@ from typing import Callable, Dict, List, Optional, Protocol, Union, runtime_chec
 
 from repro.core.comm_params import CommConfig
 from repro.core.faults import FaultSchedule, parse_fault_schedule
-from repro.core.hardware import PROFILES, Hardware
+from repro.core.hardware import Hardware, by_name, profiles
 from repro.core.scheduler import MODES, resolve_mode
 from repro.core.simulator import Measurement, Simulator
+from repro.core.topology import HierarchicalHardware, resolve_topology
 from repro.core.workload import (ConfigSet, Workload, comm_site_meta,
                                  structure_components)
 
@@ -290,6 +291,14 @@ class TunedPlan:
     # observed/predicted/scale deltas), ``generation`` and ``chain`` (every
     # ancestor digest, newest first) — see ``core.retune``.
     lineage: Dict = field(default_factory=dict)
+    # hierarchical-fabric provenance (empty for flat-tuned plans; default
+    # keeps pre-topology plan files loading): ``fingerprint``/``name`` of
+    # the ``core.topology.HierarchicalHardware`` the plan was tuned under
+    # plus its full ``spec`` (``to_dict``), so ``evaluate`` can rebuild the
+    # exact two-tier simulator and ``check_topology`` can refuse a
+    # different fabric — a cross-pod plan applied to a flat cluster is as
+    # unsound as one for the wrong model.
+    topology: Dict = field(default_factory=dict)
     version: int = PLAN_VERSION
 
     # -- identity ----------------------------------------------------------
@@ -320,6 +329,26 @@ class TunedPlan:
                 f"(fingerprint {self.fingerprint[:12]}…) but workload "
                 f"{wl.name!r} fingerprints to {fp[:12]}… — structures "
                 "differ, re-applying the configs is unsound; re-tune")
+
+    def check_topology(self, topology=None) -> None:
+        """Refuse a fabric mismatch: a plan tuned under one
+        ``HierarchicalHardware`` (or under the flat single-fabric model —
+        empty ``self.topology``) must only be applied under the same one.
+        ``topology`` accepts anything ``core.topology.resolve_topology``
+        does; ``None`` (or a flat topology) asserts the plan is
+        flat-tuned."""
+        topo = resolve_topology(topology)
+        want = "" if topo is None or topo.is_flat else topo.fingerprint()
+        have = self.topology.get("fingerprint", "")
+        if have != want:
+            def lbl(fp, name):
+                return f"{name} ({fp[:12]}…)" if fp else "flat single-fabric"
+            raise PlanMismatchError(
+                "plan was tuned under the "
+                f"{lbl(have, self.topology.get('name', '?'))} topology but "
+                f"is being applied under {lbl(want, topo.name if topo else '')}"
+                " — cross-tier configs are unsound there; re-tune with "
+                "tune(..., topology=...)")
 
     # -- apply / evaluate / compare ---------------------------------------
     def runtime_plan(self, wl: Optional[Workload] = None) -> Dict:
@@ -395,23 +424,31 @@ class TunedPlan:
         return {"changed": changed, "only_self": only_self,
                 "only_other": only_other, "meta": meta}
 
-    def _hw(self) -> Hardware:
+    def _hw(self):
+        """The simulation target the plan was tuned for: the recorded
+        ``HierarchicalHardware`` when topology provenance is present
+        (hierarchical names are not registry profiles — the embedded spec
+        is authoritative), else the named flat profile."""
+        if self.topology.get("spec"):
+            return HierarchicalHardware.from_dict(self.topology["spec"])
         try:
-            return PROFILES[self.hardware]
+            return by_name(self.hardware)
         except KeyError:
             raise KeyError(
                 f"plan hardware {self.hardware!r} is not a registered "
-                f"profile ({sorted(PROFILES)}); pass an explicit sim= to "
+                f"profile ({profiles()}); pass an explicit sim= to "
                 "evaluate/compare") from None
 
     def evaluate(self, wl: Workload, *, sim: Optional[Simulator] = None,
                  faults=None) -> Measurement:
         """Profile the plan's configs on its workload (fingerprint-checked).
         Defaults to a fresh deterministic simulator on the plan's hardware
-        profile so evaluations are stable; pass ``sim=`` to evaluate under
-        jitter or on shared RNG state, or ``faults=`` (a ``FaultSchedule``,
-        inline spec, or schedule-file path) to evaluate under a scripted
-        fault — the fresh simulator's fault clock starts at step 0."""
+        profile — or, for a topology-tuned plan, on the recorded
+        ``HierarchicalHardware`` rebuilt from provenance — so evaluations
+        are stable; pass ``sim=`` to evaluate under jitter or on shared RNG
+        state, or ``faults=`` (a ``FaultSchedule``, inline spec, or
+        schedule-file path) to evaluate under a scripted fault — the fresh
+        simulator's fault clock starts at step 0."""
         if faults is not None:
             if sim is not None:
                 raise ValueError("sim= carries its own fault schedule; "
@@ -477,13 +514,9 @@ def load_plan(path: str) -> TunedPlan:
 
 
 def _lookup_hw(hardware: Union[Hardware, str]) -> Hardware:
-    if isinstance(hardware, str):
-        try:
-            return PROFILES[hardware]
-        except KeyError:
-            raise KeyError(f"unknown hardware profile {hardware!r}; "
-                           f"registered: {sorted(PROFILES)}") from None
-    return hardware
+    # names resolve through the core.hardware registry (its KeyError
+    # already lists the registered profiles)
+    return by_name(hardware) if isinstance(hardware, str) else hardware
 
 
 # ---------------------------------------------------------------------------
@@ -499,14 +532,25 @@ def _search_to_plan(backend, method: str, mode: str, sim: Simulator,
     outcome = backend.search(sim, workload, mode=resolved, **options)
     stats = (sim.engine.cache_stats()
              if sim.batched and sim._engine is not None else None)
+    # provenance follows the simulator actually searched on: a hierarchical
+    # one stamps its topology (and keys the plan on the topology's
+    # repo-safe name); a flat one leaves topology empty — byte-identical
+    # to pre-topology plans
+    topo_meta, hw_name = {}, sim.hw.name
+    if sim.topology is not None:
+        topo_meta = {"fingerprint": sim.topology.fingerprint(),
+                     "name": sim.topology.name,
+                     "spec": sim.topology.to_dict()}
+        hw_name = sim.topology.name
     return TunedPlan(
-        method=method, mode=resolved, hardware=sim.hw.name,
+        method=method, mode=resolved, hardware=hw_name,
         workload=workload.name, fingerprint=workload_fingerprint(workload),
         seed=sim.seed, noise=sim.noise, noise_mode=sim.noise_mode,
         configs=dict(outcome.configs), sites=comm_site_meta(workload),
         profile_count=outcome.profile_count, traces=list(outcome.traces),
         cache_stats=stats, structure=structure_fingerprint(workload),
-        shape=workload_shape(workload), faults=dict(faults_meta or {}))
+        shape=workload_shape(workload), faults=dict(faults_meta or {}),
+        topology=topo_meta)
 
 
 def _scenario_states(sched: Optional[FaultSchedule]) -> List:
@@ -597,7 +641,7 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
          method: str = "lagom", mode: str = "interleaved",
          noise: float = 0.0, noise_mode: str = "default", seed: int = 0,
          batched: bool = True, simulator: Optional[Simulator] = None,
-         repo=None, faults=None, fault_ensemble=None,
+         repo=None, faults=None, fault_ensemble=None, topology=None,
          **options) -> TunedPlan:
     """Tune ``workload``'s collectives for ``hardware`` and return the
     result as a portable ``TunedPlan``.
@@ -626,6 +670,15 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
     across all scenarios' fault windows; the returned plan carries the
     ensemble, regrets and total search cost in ``plan.faults``.  Both
     build their own simulators, so they reject ``simulator=``.
+
+    Hierarchical tuning (``core.topology``): ``topology=`` (a
+    ``HierarchicalHardware``, its ``to_dict()`` spec, or a saved-topology
+    path) prices every comm against the fabric tier its site spans and
+    stamps the topology fingerprint/spec into ``plan.topology`` (the plan
+    then keys on the topology's name in repositories and refuses
+    evaluation under a different fabric via ``check_topology``).  A flat
+    topology (``pods == 1``) collapses to the bare island profile —
+    results and provenance stay byte-identical to the single-fabric path.
 
     Remaining keyword ``options`` go to the backend (e.g. Lagom's
     ``warm_start``).
@@ -660,6 +713,20 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
         ('lagom', True)
     """
     backend = get_backend(method)
+    topo = resolve_topology(topology)
+    if topo is not None:
+        if simulator is not None:
+            raise ValueError(
+                "topology= builds its own simulator; construct "
+                "Simulator(topology) and pass simulator= alone (its "
+                "topology lands in the plan provenance automatically)")
+        if hardware is not None and _lookup_hw(hardware) != topo.island:
+            raise ValueError(
+                f"topology island {topo.island.name!r} conflicts with "
+                "hardware=; pass one or the other")
+        hardware = topo.island
+        if topo.is_flat:
+            topo = None   # degenerate single-pod case: plain flat tuning
     faults = parse_fault_schedule(faults)
     if not faults:
         faults = None            # empty schedule == fault-free tuning
@@ -688,18 +755,19 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
         hw = _lookup_hw(hardware)
         sim_kw = dict(noise=noise, seed=seed, noise_mode=noise_mode,
                       batched=batched)
+        target = topo if topo is not None else hw
         if fault_ensemble is not None:
             ensemble = [parse_fault_schedule(f) for f in fault_ensemble]
             ensemble = [e for e in ensemble if e]
             if not ensemble:
                 raise ValueError("fault_ensemble has no non-empty schedules")
-            plan = _robust_tune(backend, method, mode, workload, hw, sim_kw,
-                                ensemble, options)
+            plan = _robust_tune(backend, method, mode, workload, target,
+                                sim_kw, ensemble, options)
             if repo is not None:
                 from repro.core.plan_repo import as_repository
                 as_repository(repo).put(plan)
             return plan
-        sim = Simulator(hw, faults=faults, **sim_kw)
+        sim = Simulator(target, faults=faults, **sim_kw)
     # validate here, not just in the built-in backends, so mode errors and
     # the shared-soundness rejection are uniform across every method
     # (nccl, third-party backends included)

@@ -41,6 +41,7 @@ from repro.core.comm_params import CommConfig
 from repro.core.faults import FaultSchedule, FaultState
 from repro.core.hardware import Hardware
 from repro.core.noise import NOISE_MODES, NoiseModel
+from repro.core.topology import HierarchicalHardware
 from repro.core.workload import ConfigSet, OverlapGroup, Workload
 
 
@@ -76,9 +77,23 @@ class Simulator:
     ``benchmarks/tuning_throughput.py`` baseline).  Both paths are
     numerically identical — including the noise RNG stream."""
 
-    def __init__(self, hw: Hardware, *, noise: float = 0.0, seed: int = 0,
+    def __init__(self, hw, *, noise: float = 0.0, seed: int = 0,
                  noise_mode: str = "default", batched: bool = True,
                  cache_size: int = 131072, faults: FaultSchedule = None):
+        # ``hw`` may be a flat Hardware profile or a
+        # ``topology.HierarchicalHardware``.  Flat topologies (pods == 1)
+        # collapse to their bare island profile, so their entire code path
+        # — and results — are byte-identical to passing the Hardware
+        # directly.  Hierarchical ones keep the topology for per-comm tier
+        # pricing in ``run_group``.
+        topology = None
+        if isinstance(hw, HierarchicalHardware):
+            topology = None if hw.is_flat else hw
+            hw = hw.island
+        elif not isinstance(hw, Hardware):
+            raise ValueError(
+                "hw must be a Hardware profile or a HierarchicalHardware "
+                f"topology, got {type(hw).__name__}")
         # eager argument validation: a bad seed or noise level otherwise
         # only surfaces as an opaque Philox/Box-Muller failure (or silent
         # NaN measurements) deep inside the first noisy profile call
@@ -97,12 +112,16 @@ class Simulator:
             raise ValueError(
                 f"faults must be a FaultSchedule, got {type(faults).__name__}")
         self.hw = hw
+        self.topology = topology
         self.noise = noise
         self.seed = seed
         self.noise_mode = noise_mode
         self._noise = NoiseModel(seed, noise, noise_mode) if noise else None
         self.profile_count = 0     # tuning-efficiency accounting (Fig. 8c)
-        self.batched = batched
+        # hierarchical measurements run on the scalar reference path: the
+        # engine's structural caches are keyed on a single healthy hardware
+        # (same reason faulted steps bypass it)
+        self.batched = batched and topology is None
         self._cache_size = cache_size
         self._engine = None
         # empty schedule -> None: the fault-free path is left untouched
@@ -142,13 +161,21 @@ class Simulator:
             jit_comm = [1.0] * len(g.comms)
 
         comm_hw = None
+        if self.topology is not None:
+            # hierarchical topology: each comm prices on the fabric tier
+            # its site spans — the pod-local island or the slow inter-pod
+            # tier (which still carries the island's compute side, so
+            # Eqs. 4-6 contention applies across tiers)
+            comm_hw = [self.topology.comm_hardware(op) for op in g.comms]
         if fstate is not None:
-            # active fault window: per-comm degraded link hardware, a
-            # global comp slowdown, and this step's jitter burst folded
-            # into the submission multipliers
+            # active fault window: per-comm degraded link hardware (faults
+            # degrade whichever tier the comm prices on), a global comp
+            # slowdown, and this step's jitter burst folded into the
+            # submission multipliers
+            base_hw = comm_hw if comm_hw is not None else [hw] * len(g.comms)
             comm_hw = [
-                fstate.hardware_for(op.site_id, op.name.split(".", 1)[0], hw)
-                for op in g.comms]
+                fstate.hardware_for(op.site_id, op.name.split(".", 1)[0], bh)
+                for op, bh in zip(g.comms, base_hw)]
             if fstate.comp_scale != 1.0:
                 jit_comp = [j * fstate.comp_scale for j in jit_comp]
             if fstate.sigma:

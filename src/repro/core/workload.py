@@ -40,6 +40,9 @@ class CommOp:
     group_size: int = 8        # participating chips on its mesh axis
     site: str = ""             # stable dotted SiteId (runtime addressing);
                                # defaults to ``name`` when unset
+    tier: str = ""             # fabric tier the site spans: "" = pod-local,
+                               # "inter" = pod-joining (core.topology prices
+                               # it on the slow fabric's Hardware)
 
     def __post_init__(self):
         assert self.kind in COMM_KINDS, self.kind
@@ -93,10 +96,16 @@ def comm_site_meta(wl: Workload) -> List[Dict]:
     re-applied without rebuilding the workload it was tuned on.  ``site``
     is the stable dotted SiteId runtime call sites address
     (``collectives.runtime_for``)."""
-    return [dict(group=gi, comm=ci, name=op.name, kind=op.kind,
-                 bytes=op.bytes, group_size=op.group_size, site=op.site_id)
-            for gi, g in enumerate(wl.groups)
-            for ci, op in enumerate(g.comms)]
+    rows = []
+    for gi, g in enumerate(wl.groups):
+        for ci, op in enumerate(g.comms):
+            row = dict(group=gi, comm=ci, name=op.name, kind=op.kind,
+                       bytes=op.bytes, group_size=op.group_size,
+                       site=op.site_id)
+            if op.tier:           # append-only: flat workloads stay byte-stable
+                row["tier"] = op.tier
+            rows.append(row)
+    return rows
 
 
 def structure_components(wl: Workload) -> Tuple:
@@ -112,7 +121,10 @@ def structure_components(wl: Workload) -> Tuple:
     return (wl.name, tuple(
         (g.name,
          tuple(c.name for c in g.comps),
-         tuple((c.kind, c.group_size, c.site_id) for c in g.comms))
+         # tier joins the identity only when set, so every pre-topology
+         # fingerprint (and the plan repo keyed on it) stays stable
+         tuple((c.kind, c.group_size, c.site_id) + ((c.tier,) if c.tier else ())
+               for c in g.comms))
         for g in wl.groups))
 
 

@@ -74,6 +74,8 @@ def apply_tuned_plan(path: str, *, expect_arch: Optional[str] = None,
 def resolve_plan_repo(repo_dir: str, cfg, *, parallel: str, hardware: str,
                       seq: int, global_batch: int, decode: bool = False,
                       serve: bool = False, band: float = 0.0,
+                      pods: int = 1, accum_steps: int = 1,
+                      outer_frags: int = 0,
                       quiet: bool = False) -> Optional[Dict]:
     """Rebuild the launch workload from (arch config × parallel spec ×
     shape), look it up in the repository by (structural fingerprint,
@@ -84,8 +86,20 @@ def resolve_plan_repo(repo_dir: str, cfg, *, parallel: str, hardware: str,
     ``serve=True`` builds the decode-shape workload with ``serve.*``
     SiteIds (``extract_decode_workload``) — the serving launcher's path —
     and ``band`` widens the lookup to tolerance-band resolution (nearest
-    tuned shape with the same structure; see ``PlanRepository.resolve``)."""
+    tuned shape with the same structure; see ``PlanRepository.resolve``).
+
+    ``pods`` / ``accum_steps`` / ``outer_frags`` thread the hierarchical
+    axes into the rebuilt workload so its fingerprint carries the
+    ``acc.*`` / ``outer.*`` site classes a cross-pod tune emitted; pass
+    the topology *name* (e.g. ``tpu-v5e-x2-dcn``) as ``hardware`` to hit
+    plans stored under a hierarchical key."""
+    import dataclasses
+
     pp = parse_parallel(parallel)
+    if pods > 1 or accum_steps > 1 or outer_frags > 0:
+        pp = dataclasses.replace(pp, pods=max(1, pods),
+                                 accum_steps=max(1, accum_steps),
+                                 outer_frags=max(0, outer_frags))
     if serve:
         wl = extract_decode_workload(cfg, pp, global_batch=global_batch,
                                      seq=seq)
@@ -127,37 +141,50 @@ def resolve_plan_repo(repo_dir: str, cfg, *, parallel: str, hardware: str,
 # per-site audit table (launch/dryrun.py --tuned-plan)
 # ---------------------------------------------------------------------------
 
+# site classes with no legacy comm-name bucket: their comm *names*
+# ("rs.grads.s0", "ar.grads.s0", "outer.sync.r0.f0") would otherwise fall
+# into an unrelated class bucket ("rs"/"ar") owned by per-layer sites —
+# these resolve by exact/prefix only, then XLA defaults
+_CLASSLESS_SITES = frozenset({"acc", "outer"})
+
+
 def runtime_table(plan: TunedPlan,
-                  demoted=()) -> List[Tuple[str, str, int, str, str]]:
-    """``(site_id, strategy, num_chunks, matched_plan_key, health)`` for
-    every comm site the plan was tuned over, resolved against the *active*
-    plan — what a launch with these knobs installed will actually hand
-    each site.  ``demoted`` marks sites the fault-aware lifecycle (or an
-    operator, via ``--demote``) has degraded to fallback knobs; everything
-    else reads ``ok``."""
+                  demoted=()) -> List[Tuple[str, str, int, str, str, str]]:
+    """``(site_id, strategy, num_chunks, matched_plan_key, matched_tier,
+    health)`` for every comm site the plan was tuned over, resolved against
+    the *active* plan — what a launch with these knobs installed will
+    actually hand each site.  ``matched_tier`` names the fallback level
+    that supplied the knobs (``exact``/``prefix``/``class``/``default``,
+    from ``collectives.resolve_runtime``).  ``demoted`` marks sites the
+    fault-aware lifecycle (or an operator, via ``--demote``) has degraded
+    to fallback knobs; everything else reads ``ok``."""
     from repro.parallel import collectives
 
     demoted = set(demoted)
     rows = []
     for s in plan.sites:
         sid = s.get("site") or s["name"]
-        rt, src = collectives.explain_runtime(sid, s["name"].split(".")[0])
+        cls = (None if collectives.site_class(sid) in _CLASSLESS_SITES
+               else s["name"].split(".")[0])
+        rt, src, how = collectives.resolve_runtime(sid, cls)
         health = "demoted" if sid in demoted else "ok"
         rows.append((sid, rt.strategy, rt.num_chunks, src or "<default>",
-                     health))
+                     how, health))
     return rows
 
 
 def print_runtime_table(plan: TunedPlan, demoted=()) -> None:
-    """Operator audit: site id -> knobs -> which plan key supplied them
-    (plus a health column when any site is demoted)."""
+    """Operator audit: site id -> knobs -> which plan key supplied them and
+    at which fallback tier (plus a health column when any site is
+    demoted)."""
     rows = runtime_table(plan, demoted=demoted)
     wid = max([len(r[0]) for r in rows] + [len("site")])
     print(f"{'site':<{wid}}  {'strategy':<8} {'chunks':>6}  "
-          f"{'health':<8} source")
-    for sid, strat, nc, src, health in rows:
-        print(f"{sid:<{wid}}  {strat:<8} {nc:>6}  {health:<8} {src}")
-    n_dem = sum(1 for r in rows if r[4] == "demoted")
-    print(f"({len(rows)} comm sites, {n_dem} demoted; 'source' is the plan "
-          "key that resolution matched — exact site, dotted prefix, or "
-          "class fallback)")
+          f"{'health':<8} {'tier':<8} source")
+    for sid, strat, nc, src, how, health in rows:
+        print(f"{sid:<{wid}}  {strat:<8} {nc:>6}  {health:<8} {how:<8} {src}")
+    n_dem = sum(1 for r in rows if r[5] == "demoted")
+    print(f"({len(rows)} comm sites, {n_dem} demoted; 'tier' is the "
+          "fallback level resolution matched at — exact site, dotted "
+          "prefix, class bucket, or XLA default — and 'source' the plan "
+          "key that supplied the knobs)")

@@ -59,6 +59,23 @@ def main(argv=None):
                          "e.g. fsdp:8, tp:4, ep:16, pp:4:8")
     ap.add_argument("--plan-hardware", default="tpu-v5e",
                     help="hardware profile name for the repo lookup key")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod count of the hierarchical topology this run "
+                         "spans; >1 makes the plan lookup key the topology "
+                         "name (<island>-x<pods>-<fabric>) and marks "
+                         "cross-pod sites in the rebuilt workload")
+    ap.add_argument("--inter-pod", default="dcn",
+                    help="inter-pod fabric joining the pods (core.topology "
+                         "built-ins: dcn, wan, pcie-switch)")
+    ap.add_argument("--accumulate", type=int, default=0,
+                    help="ACCO gradient-accumulation steps: sets grad_accum "
+                         "and registers acc.step*.{rs,ar}_grads sites in "
+                         "the plan lookup so a cross-pod tune's "
+                         "accumulation-overlap knobs apply")
+    ap.add_argument("--outer-sync", type=int, default=0,
+                    help="streamed outer-loop sync fragments (Streaming "
+                         "DiLoCo): registers outer.round*.sync.* sites in "
+                         "the plan lookup (needs --pods > 1)")
     args = ap.parse_args(argv)
 
     if args.config:
@@ -75,15 +92,29 @@ def main(argv=None):
     else:
         assert args.arch, "--arch or --config required"
         cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.accumulate > 1:
+        # ACCO: the scan-accumulation path trains correctly everywhere;
+        # the unrolled accum_axis path needs a shard_map-bound named axis
+        # (see train.trainer.TrainConfig), which this GSPMD launcher does
+        # not provide — the acc.* sites still shape the plan lookup below.
+        args.grad_accum = args.accumulate
     plan_active = False
     if args.tuned_plan:
         apply_tuned_plan(args.tuned_plan, expect_arch=cfg.name)
         plan_active = True
     elif args.plan_repo:
+        plan_hw = args.plan_hardware
+        if args.pods > 1:
+            from repro.core import topology
+            plan_hw = topology.hierarchical(args.plan_hardware, args.pods,
+                                            args.inter_pod).name
         rt = resolve_plan_repo(args.plan_repo, cfg,
                                parallel=args.plan_parallel,
-                               hardware=args.plan_hardware,
-                               seq=args.seq, global_batch=args.batch)
+                               hardware=plan_hw,
+                               seq=args.seq, global_batch=args.batch,
+                               pods=args.pods,
+                               accum_steps=max(1, args.accumulate),
+                               outer_frags=args.outer_sync)
         plan_active = rt is not None
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                     global_batch=args.batch)

@@ -139,23 +139,36 @@ def site_class(site: str) -> str:
     return site.split(".", 1)[0]
 
 
-def explain_runtime(site: str, cls: Optional[str] = None,
-                    ) -> Tuple[CollectiveRuntime, str]:
-    """Resolve ``site`` against the active plan; returns ``(knobs,
-    matched_key)`` where ``matched_key`` is the plan key that supplied the
-    knobs (``""`` = XLA defaults).  Resolution order: exact site id, then
-    each dotted prefix (most to least specific), then ``cls`` (the
-    collective's site class, e.g. ``"ag"``)."""
+def resolve_runtime(site: str, cls: Optional[str] = None,
+                    ) -> Tuple[CollectiveRuntime, str, str]:
+    """Resolve ``site`` against the active plan, reporting *how* it
+    matched: ``(knobs, matched_key, tier)`` with ``tier`` one of
+    ``"exact"`` (the full site id), ``"prefix"`` (a dotted prefix —
+    ``acc.step3.rs_grads`` served by an ``acc`` entry), ``"class"`` (the
+    ``cls`` fallback bucket), or ``"default"`` (XLA defaults,
+    ``matched_key == ""``).  Resolution order: exact site id, then each
+    dotted prefix (most to least specific), then ``cls``."""
     plan = _active_plan()
     if site:
         parts = site.split(".")
         for k in range(len(parts), 0, -1):
             key = ".".join(parts[:k])
             if key in plan:
-                return plan[key], key
+                return plan[key], key, ("exact" if k == len(parts)
+                                        else "prefix")
     if cls is not None and cls in plan:
-        return plan[cls], cls
-    return _DEFAULT_RUNTIME, ""
+        return plan[cls], cls, "class"
+    return _DEFAULT_RUNTIME, "", "default"
+
+
+def explain_runtime(site: str, cls: Optional[str] = None,
+                    ) -> Tuple[CollectiveRuntime, str]:
+    """Resolve ``site`` against the active plan; returns ``(knobs,
+    matched_key)`` where ``matched_key`` is the plan key that supplied the
+    knobs (``""`` = XLA defaults).  ``resolve_runtime`` additionally names
+    the fallback tier that matched."""
+    rt, key, _ = resolve_runtime(site, cls)
+    return rt, key
 
 
 def runtime_for(site: str, cls: Optional[str] = None) -> CollectiveRuntime:
@@ -333,3 +346,26 @@ def chunked_all_to_all(x, mesh: Mesh, *, axis: str = "model",
 
 def psum_tree(tree, axis: str):
     return jax.tree.map(lambda a: lax.psum(a, axis), tree)
+
+
+def psum_tree_chunked(tree, axis: str, *, num_chunks: int | None = None,
+                      site: str = "acc"):
+    """``psum_tree`` decomposed into ``num_chunks`` sequential partial
+    psums over each leaf's leading dim, so the reduce of early chunks
+    overlaps whatever compute the scheduler has in flight — the ACCO
+    accumulation-overlap gradient sync (``acc.step{k}.rs_grads`` sites)
+    and the Streaming-DiLoCo outer sync (``outer.round{r}.sync.*``).
+    ``num_chunks=None`` defers to the active tuned plan's knobs for
+    ``site`` (falling back to the ``acc`` site class); leaves whose
+    leading dim the chunk count does not divide (scalars included) reduce
+    whole."""
+    num_chunks = _resolve_chunks(num_chunks, site, site_class(site))
+
+    def one(a):
+        if num_chunks <= 1 or a.ndim == 0 or a.shape[0] % num_chunks:
+            return lax.psum(a, axis)
+        blocks = jnp.stack(jnp.split(a, num_chunks, axis=0))
+        ys = lax.map(lambda b: lax.psum(b, axis), blocks)
+        return jnp.concatenate(list(ys), axis=0)
+
+    return jax.tree.map(one, tree)

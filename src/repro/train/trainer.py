@@ -28,6 +28,15 @@ class TrainConfig:
     remat: bool = True
     microbatches: int = 1      # >1: dual-batch interleave (EP/TP overlap)
     grad_accum: int = 1        # sequential microbatches (memory ceiling)
+    accum_axis: Optional[str] = None   # ACCO accumulation overlap: with
+                                       # grad_accum > 1, unroll the
+                                       # microbatch loop and reduce batch
+                                       # k's grads over this named dp mesh
+                                       # axis (chunked psum at site
+                                       # acc.step{k}.rs_grads) while k+1's
+                                       # compute runs; requires the step to
+                                       # execute under shard_map/pmap with
+                                       # the axis bound
     backend: Optional[str] = None   # kernel backend override
     sited_mesh: Optional[Any] = None   # plan-aware explicit collectives:
                                        # per-layer sites resolve against the
@@ -47,7 +56,35 @@ def make_train_step(cfg, tcfg: TrainConfig):
         return loss, metrics
 
     def train_step(params, opt_state, batch, step):
-        if tcfg.grad_accum > 1:
+        if tcfg.grad_accum > 1 and tcfg.accum_axis:
+            # ACCO accumulation overlap: the microbatch loop is
+            # Python-unrolled so each step k is static — its grad reduce
+            # resolves the tuned knobs at site acc.step{k}.rs_grads at
+            # trace time and is issued before microbatch k+1's compute,
+            # letting XLA's latency-hiding scheduler pull the collective
+            # under it (the paper's Pattern 2, lifted to the accumulation
+            # loop).  Per-microbatch reduce (not accumulate-then-reduce)
+            # is what creates the K overlap windows the acc.* sites tune.
+            from repro.parallel import collectives
+
+            n = tcfg.grad_accum
+            mbs = [jax.tree.map(lambda a: a[i::n], batch) for i in range(n)]
+            gsum = None
+            tot_loss = jnp.zeros((), jnp.float32)
+            metrics = None
+            for k, b in enumerate(mbs):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, b)
+                g = collectives.psum_tree_chunked(
+                    g, tcfg.accum_axis, site=f"acc.step{k}.rs_grads")
+                g = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+                gsum = g if gsum is None else jax.tree.map(jnp.add, gsum, g)
+                tot_loss = tot_loss + l
+                metrics = m
+            scale = n * collectives.axis_size(tcfg.accum_axis)
+            grads = jax.tree.map(lambda a: a / scale, gsum)
+            loss = tot_loss / n
+        elif tcfg.grad_accum > 1:
             # sequential gradient accumulation via scan: bounds live
             # activations to one microbatch; grads accumulate in f32.
             n = tcfg.grad_accum

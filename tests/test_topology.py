@@ -1,0 +1,281 @@
+"""Hierarchical fabric subsystem (``core.topology``): pod-aware pricing in
+the simulator, the ``acc.*`` / ``outer.*`` site classes in extraction, the
+flat-topology byte-identity guarantee, topology provenance + refusal in
+``TunedPlan``, and tier-aware runtime resolution for the new site classes.
+"""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    ParallelPlan,
+    PlanMismatchError,
+    Simulator,
+    extract_workload,
+    tune,
+)
+from repro.core import topology as T
+from repro.core.comm_params import CommConfig
+from repro.core.workload import CommOp, OverlapGroup, matmul_comp
+from repro.parallel import collectives as C
+
+
+@pytest.fixture(autouse=True)
+def _clean_plan_state():
+    yield
+    C.install_runtime_plan({})
+
+
+def _fsdp_wl(layers=1, **plan_kw):
+    cfg = get_config("llama3-8b")
+    plan = ParallelPlan(kind="fsdp", dp=8, **plan_kw)
+    return extract_workload(cfg, plan, seq=2048, global_batch=16, layers=layers)
+
+
+def _acc_wl(layers=1, accum=2, pods=2, **kw):
+    return _fsdp_wl(layers=layers, pods=pods, accum_steps=accum, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the topology model itself
+# ---------------------------------------------------------------------------
+
+
+def test_topology_round_trip_and_identity(tmp_path):
+    topo = T.two_pod("tpu-v5e", "dcn")
+    assert not topo.is_flat
+    assert topo.name == "tpu-v5e-x2-dcn"
+    again = T.HierarchicalHardware.from_json(topo.to_json())
+    assert again == topo
+    assert again.fingerprint() == topo.fingerprint()
+    # file round-trip + string resolution
+    path = tmp_path / "topo.json"
+    topo.save(str(path))
+    assert T.resolve_topology(str(path)) == topo
+    assert T.resolve_topology(topo.to_dict()) == topo
+    assert T.resolve_topology(None) is None
+    # a different fabric is a different identity
+    assert T.two_pod("tpu-v5e", "wan").fingerprint() != topo.fingerprint()
+
+
+def test_fabric_registry_and_validation():
+    assert "dcn" in T.FABRICS and "wan" in T.FABRICS
+    with pytest.raises(KeyError):
+        T.fabric_by_name("infiniband-gossip")
+    with pytest.raises(ValueError):
+        T.Fabric(name="bad", link_bw=-1.0, chan_bw=1.0, launch_us=1.0)
+
+
+def test_flat_collapses_to_island():
+    flat = T.hierarchical("tpu-v5e", 1, "dcn")
+    assert flat.is_flat and flat.fabric is None
+    assert flat.name == "tpu-v5e"
+    sim = Simulator(flat)
+    assert sim.topology is None and sim.hw == flat.island
+    # the inter tier of a real hierarchy carries the fabric's link terms on
+    # the island's compute side
+    topo = T.two_pod("tpu-v5e", "wan")
+    inter = topo.inter_hardware
+    assert inter.link_bw == T.WAN_10G.link_bw
+    assert inter.peak_flops == topo.island.peak_flops
+    assert topo.tier_hardware("") == topo.island
+    assert topo.tier_hardware("inter") == inter
+
+
+def test_site_tier_classification():
+    assert T.site_tier("outer.round0.sync.frag3") == "inter"
+    assert T.site_tier("acc.step1.ar_grads") == "inter"
+    assert T.site_tier("acc.step1.rs_grads") == ""
+    assert T.site_tier("fsdp.layer0.ag_params") == ""
+
+
+# ---------------------------------------------------------------------------
+# simulator: per-tier pricing, flat byte-identity
+# ---------------------------------------------------------------------------
+
+
+def _one_comm_group(tier):
+    return OverlapGroup(
+        "g",
+        comps=[matmul_comp("mm", 4096, 2560, 10240)],
+        comms=[CommOp("ar.g", "allreduce", 64e6, 2, site="s.ar", tier=tier)],
+    )
+
+
+def test_inter_tier_prices_on_fabric():
+    sim = Simulator(T.two_pod("tpu-v5e", "wan"))
+    intra = sim.run_group(_one_comm_group(""), [CommConfig()])
+    inter = sim.run_group(_one_comm_group("inter"), [CommConfig()])
+    # same payload, same config: the cross-pod op pays the slow fabric
+    assert inter.comm_times[0] > 2 * intra.comm_times[0]
+
+
+def test_flat_topology_tune_is_byte_identical():
+    wl = _fsdp_wl(layers=1)
+    hw = T.flat("tpu-v5e").island
+    p_hw = tune(wl, hw)
+    p_flat = tune(wl, topology=T.flat("tpu-v5e"))
+    # configs, traces, profile_count, provenance — the whole artifact
+    assert p_flat.to_json() == p_hw.to_json()
+    assert p_flat.profile_count == p_hw.profile_count
+    assert p_flat.topology == {}
+    # and the raw oracle agrees measurement-by-measurement
+    g = _one_comm_group("")
+    m1 = Simulator(hw).run_group(g, [CommConfig()])
+    m2 = Simulator(T.flat("tpu-v5e")).run_group(g, [CommConfig()])
+    assert (m1.Z, m1.X, m1.Y, m1.comm_times, m1.comp_times) == (
+        m2.Z,
+        m2.X,
+        m2.Y,
+        m2.comm_times,
+        m2.comp_times,
+    )
+
+
+# ---------------------------------------------------------------------------
+# extraction: acc.* / outer.* site classes
+# ---------------------------------------------------------------------------
+
+
+def test_extract_accumulation_sites():
+    wl = _acc_wl(accum=2, pods=2)
+    acc = [g for g in wl.groups if g.name.startswith("acc.step")]
+    assert [g.name for g in acc] == ["acc.step0", "acc.step1"]
+    sites = [c.site_id for c in acc[0].comms]
+    assert sites == ["acc.step0.rs_grads", "acc.step0.ar_grads"]
+    tiers = [c.tier for c in acc[0].comms]
+    assert tiers == ["", "inter"]  # dp reduce pod-local, pods inter
+    # step k's reduce overlaps microbatch k+1's compute; the last step has
+    # nothing left to hide under
+    assert len(acc[0].comps) == 1 and acc[1].comps == []
+    # per-layer grad reduce-scatter moves into the acc groups wholesale
+    assert not any(
+        c.site_id.endswith(".rs_grads")
+        for g in wl.groups
+        if not g.name.startswith("acc.")
+        for c in g.comms
+    )
+    assert wl.meta["accum_steps"] == 2.0 and wl.meta["pods"] == 2.0
+
+
+def test_extract_outer_sync_sites():
+    wl = _fsdp_wl(pods=2, outer_frags=4, outer_rounds=2)
+    outer = [g for g in wl.groups if g.name.startswith("outer.round")]
+    assert [g.name for g in outer] == ["outer.round0", "outer.round1"]
+    assert [c.site_id for c in outer[0].comms] == [
+        f"outer.round0.sync.frag{f}" for f in range(4)
+    ]
+    assert all(c.tier == "inter" and c.group_size == 2 for g in outer for c in g.comms)
+    # a single pod has no cross-pod sync to stream
+    assert not any(
+        g.name.startswith("outer.") for g in _fsdp_wl(pods=1, outer_frags=4).groups
+    )
+
+
+def test_tier_joins_fingerprint():
+    from repro.core.session import workload_fingerprint
+
+    flat_wl = _fsdp_wl(layers=1)
+    assert workload_fingerprint(_acc_wl()) != workload_fingerprint(flat_wl)
+    assert workload_fingerprint(_acc_wl(pods=2)) != workload_fingerprint(
+        _acc_wl(pods=4)
+    )
+
+
+# ---------------------------------------------------------------------------
+# tune(topology=): provenance, refusal, the overlap the plan buys
+# ---------------------------------------------------------------------------
+
+
+def test_topology_plan_provenance_and_refusal():
+    topo = T.two_pod()
+    wl = _acc_wl()
+    plan = tune(wl, topology=topo, method="nccl")
+    assert plan.hardware == "tpu-v5e-x2-dcn"
+    assert plan.topology["fingerprint"] == topo.fingerprint()
+    # refusals: flat evaluation of a cross-pod plan, and vice versa
+    with pytest.raises(PlanMismatchError):
+        plan.check_topology(None)
+    with pytest.raises(PlanMismatchError):
+        plan.check_topology(T.two_pod("tpu-v5e", "wan"))
+    plan.check_topology(topo)  # the tuned fabric passes
+    flat_plan = tune(wl, "tpu-v5e", method="nccl")
+    with pytest.raises(PlanMismatchError):
+        flat_plan.check_topology(topo)
+    flat_plan.check_topology(None)
+
+
+def test_topology_plan_round_trips_and_evaluates():
+    from repro.core.session import TunedPlan
+
+    topo = T.two_pod()
+    wl = _acc_wl()
+    plan = tune(wl, topology=topo, method="nccl")
+    again = TunedPlan.from_json(plan.to_json())
+    assert again.topology == plan.topology
+    assert again.artifact_digest() == plan.artifact_digest()
+    # evaluate rebuilds the hierarchical simulator from the embedded spec
+    m = again.evaluate(wl)
+    assert m.Z > 0 and len(m.groups) == len(wl.groups)
+
+
+def test_cross_pod_tune_hides_grad_reduce():
+    """The acceptance scenario: a 2-pod accumulation tune yields distinct
+    cross-pod CommConfigs and demonstrably hides the grad reduce under the
+    next microbatch's compute in the simulator trace."""
+    topo = T.two_pod()
+    wl = _acc_wl(accum=2)
+    plan = tune(wl, topology=topo)
+    site_of = {(s["group"], s["comm"]): s.get("site") or s["name"] for s in plan.sites}
+    cfg_by_site = {site_of[k]: v for k, v in plan.configs.items()}
+    assert "acc.step0.ar_grads" in cfg_by_site
+    intra = next(v for s, v in cfg_by_site.items() if s.startswith("fsdp."))
+    assert cfg_by_site["acc.step0.ar_grads"] != intra
+    m = plan.evaluate(wl)
+    acc0 = next(g for g in m.groups if g.name == "acc.step0")
+    # busy-window overlap: comm busy + comp busy exceed the makespan only
+    # if some of the reduce ran under the compute
+    hidden = acc0.X + acc0.Y - acc0.Z
+    assert hidden > 0.05 * acc0.X
+
+
+# ---------------------------------------------------------------------------
+# runtime resolution for the new site classes
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_runtime_reports_matched_tier():
+    rt_exact = C.CollectiveRuntime("ring", 8)
+    rt_acc = C.CollectiveRuntime("chunked", 4)
+    rt_class = C.CollectiveRuntime("chunked", 2)
+    plan = {"acc.step0.ar_grads": rt_exact, "acc": rt_acc, "rs": rt_class}
+    with C.use_runtime_plan(plan):
+        assert C.resolve_runtime("acc.step0.ar_grads") == (
+            rt_exact,
+            "acc.step0.ar_grads",
+            "exact",
+        )
+        assert C.resolve_runtime("acc.step1.rs_grads") == (rt_acc, "acc", "prefix")
+        assert C.resolve_runtime("zz.site", "rs") == (rt_class, "rs", "class")
+        assert C.resolve_runtime("zz.site")[1:] == ("", "default")
+
+
+def test_runtime_table_does_not_bleed_acc_into_name_class():
+    """An ``acc.step0.rs_grads`` site whose comm is *named* ``rs.grads.s0``
+    must not claim the per-layer ``rs`` class bucket — the audit table
+    reports it at the ``default`` tier when no acc entry exists."""
+    from repro.launch.plan import runtime_table
+
+    plan = tune(_acc_wl(), topology=T.two_pod(), method="nccl")
+    C.install_runtime_plan({"rs": C.CollectiveRuntime("chunked", 7)})
+    rows = {r[0]: r for r in runtime_table(plan)}
+    sid, strategy, chunks, src, how, health = rows["acc.step0.rs_grads"]
+    assert (how, src) == ("default", "<default>")
+    # with the plan's own knobs installed every site resolves exactly
+    plan.runtime_plan()
+    from repro.core.apply import activate
+
+    activate(plan)
+    rows = {r[0]: r for r in runtime_table(plan)}
+    assert all(r[4] == "exact" for r in rows.values())
+    assert rows["acc.step0.rs_grads"][5] == "ok"
