@@ -1,0 +1,90 @@
+"""Analysis CI gate: lint + overlap verification over the tuned model zoo.
+
+Runs the two contracts the ``analysis`` CI lane enforces:
+
+1. Healthy plans are clean — zero false positives.  For three zoo
+   workloads (llama3-8b/fsdp, deepseek-moe-16b/ep, yi-34b/pp) a fresh
+   ``tune()`` must lint to zero findings, and every tuned site must
+   verify MATERIALIZED when its production chunked builder is traced
+   under the plan (the ``repro.analysis.exercise`` synthetic program).
+2. Seeded defects are caught, with stable codes.  A deliberately broken
+   copy of the fsdp plan (dead config entry + indivisible chunking) must
+   lint to exactly {LAG001, LAG010}, checked both in-process and through
+   the CLI's ``--expect`` contract.
+
+The healthy plans (and the broken fixture under ``broken/``) are saved
+into OUTDIR (argv[1], default a fresh temp dir) so the CI lane re-runs
+the ``python -m repro.analysis`` front door against the same artifacts.
+
+    PYTHONPATH=src python examples/analysis_gate.py [OUTDIR]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import copy
+import sys
+import tempfile
+
+from repro.analysis import format_findings, lint_plan
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.exercise import exercise_and_report
+from repro.configs import get_config
+from repro.core import ParallelPlan, extract_workload, tune
+from repro.core.comm_params import CommConfig
+
+ZOO = [
+    ("llama3-8b/fsdp", get_config("llama3-8b"),
+     ParallelPlan(kind="fsdp", dp=8), dict(layers=2)),
+    ("deepseek-moe-16b/ep", get_config("deepseek-moe-16b"),
+     ParallelPlan(kind="ep", ep=8), dict(layers=3)),
+    ("yi-34b/pp", get_config("yi-34b"),
+     ParallelPlan(kind="pp", pp=4, microbatches=4), dict()),
+]
+
+outdir = sys.argv[1] if len(sys.argv) > 1 else tempfile.mkdtemp(
+    prefix="analysis-gate-")
+os.makedirs(os.path.join(outdir, "broken"), exist_ok=True)
+
+# -- contract 1: tuned plans across the zoo lint clean and materialize ------
+plans, paths = [], []
+for name, cfg, pp, kw in ZOO:
+    wl = extract_workload(cfg, pp, seq=2048, global_batch=16, **kw)
+    plan = tune(wl, "tpu-v5e")
+    findings = lint_plan(plan, workload=wl)
+    assert findings == [], (
+        f"{name}: healthy tune must lint clean\n"
+        + format_findings(findings, label=name))
+    ok, text = exercise_and_report(plan, label=name)
+    print(text)
+    assert ok, f"{name}: every tuned site must be MATERIALIZED"
+    path = os.path.join(outdir, name.replace("/", "_") + ".json")
+    plan.save(path)
+    plans.append(plan)
+    paths.append(path)
+print(f"zoo gate: {len(plans)} tuned plans lint clean, all sites "
+      f"MATERIALIZED -> {outdir}")
+
+# the CLI front door agrees with the in-process result
+assert analysis_main(["lint", *paths]) == 0
+assert analysis_main(["verify-overlap", *paths]) == 0
+
+# -- contract 2: seeded defects produce exactly the expected codes ----------
+broken = copy.deepcopy(plans[0])
+broken.configs[(999, 0)] = CommConfig()              # LAG001: dead entry
+row = next(s for s in broken.sites if s["kind"] != "reducescatter")
+row["bytes"] = 1000003.0                             # prime-ish payload
+broken.configs[(row["group"], row["comm"])] = CommConfig(
+    algorithm="ring", chunk_kb=256)                  # LAG010: nc=4 won't divide
+codes = sorted({f.code for f in lint_plan(broken)})
+assert codes == ["LAG001", "LAG010"], codes
+broken_path = os.path.join(outdir, "broken", "seeded.json")
+broken.save(broken_path)
+
+# --expect inverts the exit code: 0 iff the finding set matches exactly
+assert analysis_main(["lint", broken_path]) == 1
+assert analysis_main(["lint", broken_path, "--expect", "LAG001,LAG010"]) == 0
+assert analysis_main(["lint", broken_path, "--expect", "LAG001"]) == 1
+print("seeded-defect gate: broken fixture lints to exactly "
+      "LAG001+LAG010 (CLI --expect contract holds)")

@@ -94,7 +94,11 @@ print(
 )
 
 mesh = make_mesh((8,), ("dp",))
-grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 16, 32))}
+# leading dim sized from the resolved chunk count so the tuned knobs always
+# divide evenly (an indivisible payload would degrade, LAG010)
+grads = {
+    "w": jax.random.normal(jax.random.PRNGKey(0), (8 * knobs.num_chunks, 16, 32))
+}
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.collectives import shard_map
@@ -115,3 +119,18 @@ ref = shard_map(
 ok = bool(jnp.allclose(fn(grads)["w"], ref(grads)["w"]))
 print(f"chunked accumulation psum (x{knobs.num_chunks}) matches monolithic: {ok}")
 assert ok
+
+# overlap verifier: the tuned chunk structure is really in the trace —
+# MATERIALIZED under the plan, ABSENT when the plan is not installed
+from repro.analysis.overlap import trace_and_verify
+
+report = trace_and_verify(tuned, fn, grads)
+v = next(x for x in report.verdicts if x.site == "acc.step0.rs_grads")
+print(f"overlap verdict for acc.step0.rs_grads: {v.verdict} ({v.detail})")
+assert v.verdict == "MATERIALIZED", report.format()
+
+C.install_runtime_plan({})  # drop the activated plan: the ABSENT control
+off = trace_and_verify(tuned, fn, grads, install=False)
+v_off = next(x for x in off.verdicts if x.site == "acc.step0.rs_grads")
+print(f"without the plan installed: {v_off.verdict}")
+assert v_off.verdict == "ABSENT", off.format()

@@ -1,0 +1,70 @@
+"""Static analysis of plan artifacts: the overlap-materialization
+verifier and the deployment linter.
+
+A ``TunedPlan`` only earns its speedup if the compiler actually emits the
+chunk structure it promises, and only deploys safely if its entries,
+provenance and lineage are coherent.  This package checks both without
+running a training step:
+
+``analysis.ir``
+    Collective/compute op-graph extraction from closed jaxprs and
+    post-SPMD HLO text (the shared op table; ``collective_bytes`` is the
+    dryrun roofline parser, async ``-start``/``-done`` aware).
+
+``analysis.overlap``
+    The verifier: trace under the plan with the trace-time resolution
+    recorder armed, then judge every consulted tuned site
+    ``MATERIALIZED | DEGRADED | ABSENT``.
+
+``analysis.lint``
+    The linter: registered ``LAG0xx`` rules over ``TunedPlan × Workload ×
+    Topology`` (dead entries, shadowed rules, indivisible chunks, tier
+    mismatches, provenance drift, band-unservable shapes, malformed
+    lineage).
+
+``analysis.exercise``
+    Model-free verification: synthetic per-site builder programs sized so
+    the plan's chunking divides (the ``verify-overlap`` CLI body).
+
+Front doors: ``python -m repro.analysis lint|verify-overlap``,
+``launch/dryrun.py --lint``, ``session.tune(lint=...)``,
+``PlanRepository.put(lint=...)`` and the ``serving.plans.PlanBinding``
+ERROR-refusal gate.
+
+Importing this package (and running ``lint``) stays jax-free; the
+verifier modules import jax lazily on first attribute access.
+"""
+
+from repro.analysis.ir import (COLLECTIVE_OPS, ChunkLoop, CollectiveOp,
+                               OpGraph, collective_bytes, graph_from_hlo,
+                               graph_from_jaxpr)
+from repro.analysis.lint import (Finding, PlanLintError, check_plan, errors,
+                                 format_findings, lint_plan, rule, rules)
+
+_LAZY = {
+    # jax-importing modules: resolved on first access
+    "OverlapReport": "repro.analysis.overlap",
+    "SiteVerdict": "repro.analysis.overlap",
+    "trace_and_verify": "repro.analysis.overlap",
+    "verify": "repro.analysis.overlap",
+    "verify_hlo": "repro.analysis.overlap",
+    "exercise_plan": "repro.analysis.exercise",
+    "exercise_and_report": "repro.analysis.exercise",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "COLLECTIVE_OPS", "ChunkLoop", "CollectiveOp", "Finding", "OpGraph",
+    "OverlapReport", "PlanLintError", "SiteVerdict", "check_plan",
+    "collective_bytes", "errors", "exercise_and_report", "exercise_plan",
+    "format_findings", "graph_from_hlo", "graph_from_jaxpr", "lint_plan",
+    "rule", "rules", "trace_and_verify", "verify", "verify_hlo",
+]

@@ -75,9 +75,33 @@ class PlanRepository:
         return os.path.exists(self.path_for(fp, hw))
 
     # -- store / fetch -----------------------------------------------------
-    def put(self, plan: TunedPlan, *, overwrite: bool = True) -> str:
+    def put(self, plan: TunedPlan, *, overwrite: bool = True,
+            lint: Optional[str] = None) -> str:
         """Store ``plan`` under its own (fingerprint, hardware) provenance;
-        returns the entry path."""
+        returns the entry path.  ``lint="error"`` refuses to publish a
+        plan with ERROR-severity deployment-lint findings
+        (``repro.analysis.lint.PlanLintError``); ``lint="warn"`` surfaces
+        findings as one ``RuntimeWarning`` but publishes anyway."""
+        if lint not in (None, "off"):
+            if lint not in ("warn", "error"):
+                raise ValueError(f"lint= must be None, 'off', 'warn' or "
+                                 f"'error', got {lint!r}")
+            from repro.analysis.lint import (PlanLintError, errors,
+                                             format_findings, lint_plan)
+
+            findings = lint_plan(plan)
+            if lint == "error" and errors(findings):
+                raise PlanLintError(
+                    findings,
+                    label=f"repository entry ({plan.fingerprint[:12]}…, "
+                          f"{plan.hardware})")
+            if findings:
+                import warnings
+
+                warnings.warn(
+                    format_findings(findings,
+                                    label=f"put({plan.workload!r})"),
+                    RuntimeWarning, stacklevel=2)
         path = self.path_for(plan.fingerprint, plan.hardware)
         if not overwrite and os.path.exists(path):
             raise FileExistsError(

@@ -637,12 +637,38 @@ def _robust_tune(backend, method: str, mode: str, workload: Workload,
     return plan
 
 
+def _lint_gate(plan: TunedPlan, workload: Workload, topology,
+               lint: Optional[str]) -> None:
+    """The ``tune(lint=...)`` hook: run the deployment linter
+    (``repro.analysis.lint``) on a freshly tuned plan before it is
+    returned or persisted.  ``None``/``"off"`` skip, ``"warn"`` emits one
+    ``RuntimeWarning`` carrying the findings, ``"error"`` raises
+    ``PlanLintError`` on ERROR-severity findings (warnings still warn)."""
+    if lint in (None, "off"):
+        return
+    if lint not in ("warn", "error"):
+        raise ValueError(f"lint= must be None, 'off', 'warn' or 'error', "
+                         f"got {lint!r}")
+    from repro.analysis.lint import (PlanLintError, errors,
+                                     format_findings, lint_plan)
+
+    findings = lint_plan(plan, workload=workload, topology=topology)
+    if lint == "error" and errors(findings):
+        raise PlanLintError(findings,
+                            label=f"tuned plan for {workload.name!r}")
+    if findings:
+        import warnings
+
+        warnings.warn(format_findings(findings, label=repr(workload.name)),
+                      RuntimeWarning, stacklevel=3)
+
+
 def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
          method: str = "lagom", mode: str = "interleaved",
          noise: float = 0.0, noise_mode: str = "default", seed: int = 0,
          batched: bool = True, simulator: Optional[Simulator] = None,
          repo=None, faults=None, fault_ensemble=None, topology=None,
-         **options) -> TunedPlan:
+         lint: Optional[str] = None, **options) -> TunedPlan:
     """Tune ``workload``'s collectives for ``hardware`` and return the
     result as a portable ``TunedPlan``.
 
@@ -680,6 +706,12 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
     topology (``pods == 1``) collapses to the bare island profile —
     results and provenance stay byte-identical to the single-fabric path.
 
+    Static analysis (``repro.analysis``): ``lint=`` runs the deployment
+    linter on the tuned plan before it is returned or auto-``put`` —
+    ``"warn"`` surfaces findings as one ``RuntimeWarning``, ``"error"``
+    additionally raises ``PlanLintError`` on ERROR-severity findings (the
+    plan is then neither returned nor persisted).  Default ``None`` skips.
+
     Remaining keyword ``options`` go to the backend (e.g. Lagom's
     ``warm_start``).
 
@@ -693,6 +725,8 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
         repo: directory or ``PlanRepository`` to auto-``put`` into.
         faults / fault_ensemble: scripted degradation for fault-aware or
             minimax-robust tuning (see above).
+        lint: deployment-linter gate on the result — ``None``/``"off"``,
+            ``"warn"``, or ``"error"`` (see above).
 
     Returns:
         A ``TunedPlan`` carrying the configs and full provenance.
@@ -763,6 +797,7 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
                 raise ValueError("fault_ensemble has no non-empty schedules")
             plan = _robust_tune(backend, method, mode, workload, target,
                                 sim_kw, ensemble, options)
+            _lint_gate(plan, workload, topo, lint)
             if repo is not None:
                 from repro.core.plan_repo import as_repository
                 as_repository(repo).put(plan)
@@ -774,6 +809,9 @@ def tune(workload: Workload, hardware: Union[Hardware, str, None] = None, *,
     faults_meta = {"schedule": faults.to_dict()} if faults is not None else {}
     plan = _search_to_plan(backend, method, mode, sim, workload, options,
                            faults_meta)
+    _lint_gate(plan, workload,
+               topo if topo is not None else getattr(sim, "topology", None),
+               lint)
     if repo is not None:
         from repro.core.plan_repo import as_repository
         as_repository(repo).put(plan)
@@ -881,7 +919,20 @@ def _main(argv=None) -> int:
     d.add_argument("b", help="comparison plan JSON")
     args = ap.parse_args(argv)
     if args.cmd == "diff":
-        delta = TunedPlan.load(args.a).diff(TunedPlan.load(args.b))
+        import sys
+
+        plans = []
+        for path in (args.a, args.b):
+            # a missing file, non-JSON bytes, or JSON that is not a
+            # TunedPlan artifact must exit with a clean diagnostic, not a
+            # traceback — this CLI is wired into launch scripts
+            try:
+                plans.append(TunedPlan.load(path))
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                print(f"error: {path}: not a readable TunedPlan artifact "
+                      f"({e.__class__.__name__}: {e})", file=sys.stderr)
+                return 2
+        delta = plans[0].diff(plans[1])
         print(_format_diff(args.a, args.b, delta))
         return 0 if not (delta["changed"] or delta["only_self"]
                          or delta["only_other"] or delta["meta"]) else 1

@@ -13,7 +13,6 @@ Outputs one JSON per combo under experiments/dryrun/.
 """
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
@@ -51,27 +50,14 @@ _DRYRUN_ERRORS = (ValueError, TypeError, KeyError, IndexError,
 
 
 def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Sum operand bytes of every collective op in the (post-SPMD) HLO."""
-    out = {k: 0.0 for k in _COLLECTIVES}
-    out["count"] = 0
-    dt_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f64": 8,
-                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3": 1,
-                "f8e5m2": 1, "s16": 2, "u16": 2}
-    # lines like: %ag = bf16[2,512]{1,0} all-gather(...)
-    pat = re.compile(
-        r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\]"        # result dtype[shape]
-        r"[^=]*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b")
-    for mt in pat.finditer(hlo_text):
-        dt, shp, kind = mt.groups()
-        if dt not in dt_bytes:
-            continue
-        n = 1
-        for d in shp.split(","):
-            if d.strip().isdigit():
-                n *= int(d)
-        out[kind] += n * dt_bytes[dt]
-        out["count"] += 1
-    return out
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO.
+
+    Delegates to the shared op table in ``repro.analysis.ir``: same keys
+    as before (base opcodes + ``count``), now covering async
+    ``-start``/``-done`` forms (summed once under the base opcode)."""
+    from repro.analysis.ir import collective_bytes
+
+    return collective_bytes(hlo_text)
 
 
 def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -269,7 +255,21 @@ def main(argv=None):
                          "knobs after installing --tuned-plan (audit what a "
                          "runtime health demotion would hand each site; the "
                          "table grows a 'health' column marking them)")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the deployment linter (repro.analysis.lint) "
+                         "on --tuned-plan and exit before anything "
+                         "compiles: prints the analysis: summary line, "
+                         "exits 1 on ERROR-severity findings, 0 otherwise")
     args = ap.parse_args(argv)
+
+    if args.lint and not args.tuned_plan:
+        ap.error("--lint requires --tuned-plan")
+    if args.tuned_plan and args.lint:
+        from repro.analysis.lint import errors, format_findings, lint_plan
+        from repro.core.session import TunedPlan
+        findings = lint_plan(TunedPlan.load(args.tuned_plan))
+        print(format_findings(findings, label=args.tuned_plan), flush=True)
+        sys.exit(1 if errors(findings) else 0)
 
     if args.tuned_plan:
         from repro.core.apply import activate

@@ -101,6 +101,10 @@ def main(argv=None):
     ap.add_argument("--retune-max", type=int, default=4,
                     help="maximum re-tunes per run; beyond the budget "
                          "flagged sites fall back to demotion")
+    ap.add_argument("--no-plan-lint", action="store_true",
+                    help="override the deployment-lint refusal gate: serve "
+                         "a --tuned-plan even when repro.analysis.lint "
+                         "finds ERROR-severity defects in it")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -119,6 +123,7 @@ def main(argv=None):
         plan_kw = dict(repo=args.plan_repo, plan_hardware=args.plan_hardware,
                        plan_parallel=args.plan_parallel,
                        plan_band=args.plan_band)
+    plan_kw["plan_lint"] = "off" if args.no_plan_lint else "error"
     if args.fault_schedule:
         plan_kw.update(fault_schedule=args.fault_schedule,
                        health_window=args.health_window,

@@ -9,7 +9,6 @@ MLPs, and capacity-based mixture-of-experts with shared experts.
 from __future__ import annotations
 
 import math
-import warnings
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
@@ -615,11 +614,14 @@ def moe_block(p: Params, cfg, x: jnp.ndarray, *, capacity_factor: float | None =
     if mesh is not None:
         n = dict(mesh.shape).get(axis, 1)
         if E % n or cap % n:
-            warnings.warn(
-                f"collective site {site!r}: expert buffer (E={E}, cap={cap}) "
-                f"is not divisible by the {axis!r} axis ({n}); using the "
-                "GSPMD expert layout instead of explicit all-to-alls",
-                RuntimeWarning, stacklevel=2)
+            from repro.parallel.collectives import warn_degraded
+
+            warn_degraded(
+                site,
+                f"expert buffer (E={E}, cap={cap}) is not divisible by the "
+                f"{axis!r} axis ({n}); using the GSPMD expert layout "
+                "instead of explicit all-to-alls",
+                stacklevel=3)
             mesh = None
     if mesh is not None:
         y = _moe_ffn_explicit(p, buf, mesh, axis=axis, site=site)

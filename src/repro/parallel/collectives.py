@@ -75,6 +75,22 @@ class CollectiveRuntime:
     num_chunks: int = 1
 
 
+@dataclass(frozen=True)
+class SiteResolution:
+    """One ``resolve_runtime`` consultation observed by
+    ``record_site_resolutions`` — the ground truth the overlap verifier
+    (``repro.analysis.overlap``) attributes emitted chunk structure with:
+    plans are consumed at *trace* time, so the set of recorded rows is
+    exactly the set of sites the traced program addressed, with the knobs
+    and fallback tier each one actually received."""
+    site: str
+    cls: Optional[str]
+    strategy: str
+    num_chunks: int
+    matched_key: str     # plan key that supplied the knobs ("" = default)
+    tier: str            # "exact" | "prefix" | "class" | "default"
+
+
 # Active runtime plans, each ``{site_id: CollectiveRuntime}``.  The base
 # plan is process-wide (``install_runtime_plan`` — the launchers'
 # ``--tuned-plan`` startup path); ``use_runtime_plan`` layers scoped plans
@@ -127,6 +143,34 @@ def _active_plan() -> Dict[str, CollectiveRuntime]:
     return scopes[-1] if scopes else _BASE_PLAN
 
 
+# Trace-time site-resolution recorder (context-local, like the scoped
+# plans): while a ``record_site_resolutions`` block is active, every
+# ``resolve_runtime`` call appends a ``SiteResolution`` row.  The overlap
+# verifier traces a model builder inside this block to learn which sites
+# the program consulted and what knobs each received — the sound way to
+# attribute emitted scan/while chunk structure back to dotted SiteIds
+# (builder call sites address plans at coarser granularity than the
+# Workload IR site ids, so name matching alone is not enough).
+_RESOLUTION_LOG: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_site_resolution_log", default=None)
+
+
+@contextlib.contextmanager
+def record_site_resolutions():
+    """Record every ``resolve_runtime`` consultation in the ``with`` block.
+
+    Yields the live list of ``SiteResolution`` rows (appended in call
+    order, duplicates included — a builder may consult one site several
+    times).  Nests: the innermost recorder captures the rows; outer
+    recorders resume on exit.  Thread/async-safe (context-local)."""
+    rows: list = []
+    token = _RESOLUTION_LOG.set(rows)
+    try:
+        yield rows
+    finally:
+        _RESOLUTION_LOG.reset(token)
+
+
 def active_runtime_plan() -> Dict[str, CollectiveRuntime]:
     """The innermost active plan (a copy)."""
     return dict(_active_plan())
@@ -149,16 +193,23 @@ def resolve_runtime(site: str, cls: Optional[str] = None,
     ``matched_key == ""``).  Resolution order: exact site id, then each
     dotted prefix (most to least specific), then ``cls``."""
     plan = _active_plan()
+    rt, key, tier = _DEFAULT_RUNTIME, "", "default"
     if site:
         parts = site.split(".")
         for k in range(len(parts), 0, -1):
-            key = ".".join(parts[:k])
-            if key in plan:
-                return plan[key], key, ("exact" if k == len(parts)
-                                        else "prefix")
-    if cls is not None and cls in plan:
-        return plan[cls], cls, "class"
-    return _DEFAULT_RUNTIME, "", "default"
+            pk = ".".join(parts[:k])
+            if pk in plan:
+                rt, key, tier = plan[pk], pk, ("exact" if k == len(parts)
+                                               else "prefix")
+                break
+    if tier == "default" and cls is not None and cls in plan:
+        rt, key, tier = plan[cls], cls, "class"
+    log = _RESOLUTION_LOG.get()
+    if log is not None:
+        log.append(SiteResolution(site=site, cls=cls, strategy=rt.strategy,
+                                  num_chunks=rt.num_chunks, matched_key=key,
+                                  tier=tier))
+    return rt, key, tier
 
 
 def explain_runtime(site: str, cls: Optional[str] = None,
@@ -185,14 +236,59 @@ def _resolve_chunks(num_chunks, site: str, cls: Optional[str] = None) -> int:
     return runtime_for(site, cls).num_chunks if num_chunks is None else num_chunks
 
 
+class CollectiveDegradedWarning(RuntimeWarning):
+    """A tuned site degrading to its monolithic/fallback collective at
+    trace time.  Carries the same stable lint code as the static rule in
+    ``repro.analysis.lint`` (``LAG010``: chunk count does not divide the
+    payload) plus the resolved site id, so runtime warnings and static
+    findings name the identical defect.  ``args[0]`` is the formatted
+    message; ``site``/``code`` are machine-readable."""
+
+    code = "LAG010"
+
+    def __init__(self, message: str, *, site: str = ""):
+        super().__init__(message)
+        self.site = site
+
+
+# Sites already warned about in this process: a degraded site warns once,
+# not once per retrace (jit re-traces, vmap/grad passes and serving
+# hot-swaps would otherwise repeat the identical message).  Tests reset
+# via ``reset_degraded_warnings``.
+_DEGRADED_WARNED: set = set()
+
+
+def reset_degraded_warnings() -> None:
+    """Clear the per-process ``CollectiveDegradedWarning`` dedupe state so
+    the next degradation at any site warns again (test isolation)."""
+    _DEGRADED_WARNED.clear()
+
+
+def warn_degraded(site: str, detail: str, *, stacklevel: int = 3) -> None:
+    """Emit the structured ``LAG010`` degradation warning for ``site``,
+    once per (site, detail) per process.  ``detail`` finishes the sentence
+    "collective site S: ..." — it should name what failed to divide and
+    what the fallback emission is."""
+    key = (site, detail)
+    if key in _DEGRADED_WARNED:
+        return
+    _DEGRADED_WARNED.add(key)
+    warnings.warn(
+        CollectiveDegradedWarning(
+            f"[{CollectiveDegradedWarning.code}] collective site {site!r}: "
+            f"{detail}", site=site),
+        stacklevel=stacklevel)
+
+
 def _warn_unchunked(site: str, num_chunks: int, detail: str) -> None:
     """A tuned chunk count that does not divide the shard shape silently
     degrading to the monolithic collective is an audit hazard — name the
     site once at trace time instead."""
-    warnings.warn(
-        f"collective site {site!r}: num_chunks={num_chunks} does not divide "
-        f"{detail}; emitting the unchunked collective for this site",
-        RuntimeWarning, stacklevel=3)
+    warn_degraded(
+        site,
+        f"num_chunks={num_chunks} does not divide {detail}; emitting the "
+        "unchunked collective for this site",
+        stacklevel=4)
 
 
 # ---------------------------------------------------------------------------
@@ -362,7 +458,11 @@ def psum_tree_chunked(tree, axis: str, *, num_chunks: int | None = None,
     num_chunks = _resolve_chunks(num_chunks, site, site_class(site))
 
     def one(a):
-        if num_chunks <= 1 or a.ndim == 0 or a.shape[0] % num_chunks:
+        if num_chunks <= 1 or a.ndim == 0:
+            return lax.psum(a, axis)
+        if a.shape[0] % num_chunks:
+            _warn_unchunked(site, num_chunks,
+                            f"the leading dim ({a.shape[0]}) of a grad leaf")
             return lax.psum(a, axis)
         blocks = jnp.stack(jnp.split(a, num_chunks, axis=0))
         ys = lax.map(lambda b: lax.psum(b, axis), blocks)

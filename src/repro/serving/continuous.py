@@ -43,7 +43,8 @@ class ContinuousEngine:
                  plan_hardware: str = "tpu-v5e", plan_parallel=None,
                  plan_band: float = DEFAULT_BAND, mesh=None,
                  fault_schedule=None, health_window: int = 3,
-                 health_tolerance: float = 0.25, retune=None):
+                 health_tolerance: float = 0.25, retune=None,
+                 plan_lint: str = "error"):
         assert cfg.family != "audio", "continuous engine is decoder-only"
         self.cfg = cfg
         self.params = params
@@ -53,7 +54,7 @@ class ContinuousEngine:
         self._binding = PlanBinding(cfg, plan=plan, repo=repo,
                                     hardware=plan_hardware,
                                     parallel=plan_parallel, band=plan_band,
-                                    max_seq=max_seq)
+                                    max_seq=max_seq, lint=plan_lint)
         if fault_schedule is not None:
             self._binding.attach_faults(fault_schedule,
                                         tolerance=health_tolerance,

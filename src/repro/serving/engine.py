@@ -83,7 +83,8 @@ class Engine:
                  plan_hardware: str = "tpu-v5e", plan_parallel=None,
                  plan_band: float = DEFAULT_BAND, mesh=None,
                  fault_schedule=None, health_window: int = 3,
-                 health_tolerance: float = 0.25, retune=None):
+                 health_tolerance: float = 0.25, retune=None,
+                 plan_lint: str = "error"):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -92,7 +93,7 @@ class Engine:
         self._binding = PlanBinding(cfg, plan=plan, repo=repo,
                                     hardware=plan_hardware,
                                     parallel=plan_parallel, band=plan_band,
-                                    max_seq=max_seq)
+                                    max_seq=max_seq, lint=plan_lint)
         if fault_schedule is not None:
             self._binding.attach_faults(fault_schedule,
                                         tolerance=health_tolerance,

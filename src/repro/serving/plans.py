@@ -69,6 +69,12 @@ class PlanBinding:
         parallel: deployed topology for workload rebuilds (see above).
         band: shape tolerance for banded repository resolution.
         max_seq: decode sequence length the workload is rebuilt at.
+        lint: deployment-lint gate on pinned ``TunedPlan``s —
+            ``"error"`` (default) refuses a plan with ERROR-severity
+            findings (``repro.analysis.lint.PlanLintError``), ``"warn"``
+            surfaces findings as one ``RuntimeWarning``, ``"off"``
+            disables the gate.  Findings from the last gated install are
+            kept on ``lint_findings``.
 
     The live surfaces the engines and the retune loop read: ``current``
     (the runtime plan decode is scoped under), ``stats`` (resolution
@@ -95,11 +101,17 @@ class PlanBinding:
         parallel: Union[ParallelPlan, str, None] = None,
         band: float = DEFAULT_BAND,
         max_seq: int = 0,
+        lint: str = "error",
     ):
+        if lint not in ("off", "warn", "error"):
+            raise ValueError(f"lint= must be 'off', 'warn' or 'error', "
+                             f"got {lint!r}")
         self.cfg = cfg
         self.hardware = hardware
         self.band = band
         self.max_seq = max_seq
+        self.lint = lint
+        self.lint_findings: List = []  # last gated install's findings
         if isinstance(parallel, str):
             parallel = parse_parallel(parallel)
         self.parallel = parallel or ParallelPlan(kind="tp", tp=1)
@@ -148,6 +160,7 @@ class PlanBinding:
         if isinstance(plan, (str, os.PathLike)):
             plan = TunedPlan.load(plan)
         if isinstance(plan, TunedPlan):
+            self._gate(plan)
             self._plan = plan
             self._health = self._telemetry = None  # re-arm on the new plan
             self.demoted.clear()  # new plan: every site starts trusted and
@@ -156,6 +169,30 @@ class PlanBinding:
         else:
             rt = plan
         self._swap(rt)
+
+    def _gate(self, plan: TunedPlan) -> None:
+        """The deployment-lint refusal gate: a pinned artifact with
+        ERROR-severity findings must not reach decode (``lint="error"``,
+        the default) — a dead/shadowed/mis-tiered plan silently serves
+        wrong knobs otherwise.  ``lint="off"`` is the operator override."""
+        if self.lint == "off":
+            return
+        from repro.analysis.lint import PlanLintError, errors, lint_plan
+
+        self.lint_findings = lint_plan(plan)
+        bad = errors(self.lint_findings)
+        if bad and self.lint == "error":
+            raise PlanLintError(
+                self.lint_findings,
+                label=f"plan pinned to PlanBinding({self.cfg.name!r})")
+        if self.lint == "warn" and self.lint_findings:
+            import warnings
+
+            from repro.analysis.lint import format_findings
+
+            warnings.warn(format_findings(self.lint_findings,
+                                          label=repr(self.cfg.name)),
+                          RuntimeWarning, stacklevel=3)
 
     def _swap(self, rt: Optional[Dict]) -> None:
         d = plan_digest(rt) if rt is not None else ()

@@ -4,3 +4,17 @@ import sys
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
 # must see exactly 1 device (multi-device tests spawn subprocesses).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _reset_degraded_warning_dedupe():
+    # CollectiveDegradedWarning (LAG010) dedupes per site per process so
+    # production retraces warn once; tests that expect the warning must
+    # each see a fresh dedupe set.
+    from repro.parallel import collectives as C
+
+    C.reset_degraded_warnings()
+    yield

@@ -90,6 +90,25 @@ with C.use_runtime_plan({"tp.layer0.mlp": rt("chunked", 2),
                          "tp.layer1.mlp": rt("chunked", 4)}):
     out = M.forward_hidden(cfg, params, batch, mesh=mesh)[0]
 assert float(jnp.abs(ref - out).max()) < 1e-3
+
+# overlap verifier acceptance: every tuned chunked site MATERIALIZED at
+# both the jaxpr and the compiled-HLO level, and the same trace flips to
+# ABSENT when the plan is deliberately not installed
+from repro.analysis.overlap import trace_and_verify
+plan = {"tp.layer0.mlp": rt("chunked", 2), "tp.layer1.mlp": rt("chunked", 4)}
+fn = lambda p: M.forward_hidden(cfg, p, batch, mesh=mesh)[0]
+jrep, hrep = trace_and_verify(plan, fn, params, hlo=divergent)
+for rep in (jrep, hrep):
+    assert rep.ok() and len(rep.verdicts) == 4, rep.format()
+    for site, nc in (("tp.layer0.mlp.ag", 2), ("tp.layer0.mlp.rs", 2),
+                     ("tp.layer1.mlp.ag", 4), ("tp.layer1.mlp.rs", 4)):
+        v = next(x for x in rep.verdicts if x.site == site)
+        assert (v.verdict, v.num_chunks) == ("MATERIALIZED", nc), (
+            rep.source, site, v)
+off_j, off_h = trace_and_verify(plan, fn, params, install=False,
+                                hlo=uniform1)
+assert [v.verdict for v in off_j.verdicts] == ["ABSENT"] * 4, off_j.format()
+assert [v.verdict for v in off_h.verdicts] == ["ABSENT"] * 4, off_h.format()
 print("SUBPROCESS_OK")
 """
 

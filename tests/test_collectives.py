@@ -63,3 +63,64 @@ def test_collectives_on_8_devices():
     out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
                          capture_output=True, text=True, timeout=560)
     assert "SUBPROCESS_OK" in out.stdout, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# resolve_runtime precedence edge cases (in-process: resolution is pure)
+# ---------------------------------------------------------------------------
+
+from repro.parallel import collectives as C  # noqa: E402
+
+
+def test_resolve_classless_acc_and_outer_sites():
+    """``acc.*``/``outer.*`` sites have no legacy class bucket — their
+    first dotted component doubles as both prefix entry and the ``cls``
+    fallback, so both routes must land on the same entry (and report the
+    tier of whichever matched first: prefix)."""
+    rt = C.CollectiveRuntime
+    plan = {"acc": rt("chunked", 4), "outer": rt("ring", 2)}
+    with C.use_runtime_plan(plan):
+        for sid, want in (("acc.step3.rs_grads", plan["acc"]),
+                          ("outer.round1.sync.w", plan["outer"])):
+            cls = C.site_class(sid)
+            knobs, key, tier = C.resolve_runtime(sid, cls)
+            assert (knobs, key, tier) == (want, cls, "prefix"), sid
+            # the class route alone (site unknown) still resolves
+            knobs, key, tier = C.resolve_runtime("", cls)
+            assert (knobs, key, tier) == (want, cls, "class"), sid
+
+
+def test_resolve_exact_beats_prefix_beats_class_with_empty_class():
+    rt = C.CollectiveRuntime
+    exact, prefix, klass = rt("ring", 8), rt("ring", 4), rt("chunked", 2)
+    plan = {"a.b.c": exact, "a.b": prefix, "": klass}
+    with C.use_runtime_plan(plan):
+        assert C.resolve_runtime("a.b.c", "")[1:] == ("a.b.c", "exact")
+        assert C.resolve_runtime("a.b.d", "")[1:] == ("a.b", "prefix")
+        # nothing dotted matches: the empty-string class entry is a real
+        # key, not the "no match" sentinel
+        knobs, key, tier = C.resolve_runtime("z.y", "")
+        assert (knobs, key, tier) == (klass, "", "class")
+        # empty site + empty class: the site loop never runs, class wins
+        assert C.resolve_runtime("", "")[2] == "class"
+        # cls=None opts out entirely -> XLA default, matched_key ""
+        knobs, key, tier = C.resolve_runtime("z.y", None)
+        assert tier == "default" and key == "" and knobs.num_chunks == 1
+
+
+def test_resolve_prefix_shadowed_by_exhaustive_exact_entries():
+    """When every site under a prefix also has an exact entry, the prefix
+    entry is never the winning key for those sites — it only serves
+    *novel* siblings (the first-wins ``setdefault`` lowering depends on
+    this to stay bit-identical to pre-per-site plans)."""
+    rt = C.CollectiveRuntime
+    exacts = {f"tp.layer{i}.mlp.ag": rt("ring", i + 2) for i in range(3)}
+    plan = dict(exacts)
+    plan["tp"] = rt("chunked", 16)
+    with C.use_runtime_plan(plan):
+        for sid, want in exacts.items():
+            knobs, key, tier = C.resolve_runtime(sid, "ag")
+            assert (knobs, key, tier) == (want, sid, "exact")
+        # a sibling with no exact entry falls through to the prefix
+        knobs, key, tier = C.resolve_runtime("tp.layer9.mlp.ag", "ag")
+        assert (knobs, key, tier) == (plan["tp"], "tp", "prefix")

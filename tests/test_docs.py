@@ -17,6 +17,7 @@ DOC_FILES = [
     "docs/architecture.md",
     "docs/plan-lifecycle.md",
     "docs/operations.md",
+    "docs/analysis.md",
 ]
 
 
